@@ -1,0 +1,181 @@
+"""Shared benchmark harness: builds (domain x device) ECO-LLM deployments and
+all baselines the paper compares against.
+
+Baselines:
+  * Oracle      — exhaustive per-query best path (upper bound, paper Table 4)
+  * GPT-4.1     — strongest cloud model with the best-average preprocessing
+                  config from emulation (paper's cloud-only row)
+  * RouteLLM-X  — learned difficulty router sending X% of queries to the
+                  cloud tier, fixed best-average preprocessing (model routing
+                  only — the paper's central comparison)
+  * Static      — single best-average path (ablation Config 1)
+  * CCA-only    — per-query 1-NN on raw embeddings, no DSQE (ablation Config 2)
+  * ECO-C/ECO-L — full system, cost-first / latency-first
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core.cca import critical_component_analysis, find_best_path
+from repro.core.devices import EDGE_DEVICES
+from repro.core.domains import build_domain, train_test_split
+from repro.core.dsqe import train_dsqe
+from repro.core.emulator import Emulator
+from repro.core.paths import MODEL_CATALOG, PathSpace
+from repro.core.rps import RuntimePathSelector, build_static_policy
+from repro.core.slo import SLO
+
+N_QUERIES = 150
+BUDGET = 5.0
+SEED = 0
+
+
+@dataclass
+class Deployment:
+    domain: object
+    space: PathSpace
+    emu: Emulator
+    table: object
+    train_idx: list
+    test_idx: list
+    device_name: str
+
+
+@lru_cache(maxsize=32)
+def deploy(domain_name: str, device_name: str = "m4", n_queries: int = N_QUERIES,
+           budget: float = BUDGET, seed: int = SEED) -> Deployment:
+    dom = build_domain(domain_name, n_queries=n_queries, seed=seed)
+    device = EDGE_DEVICES[device_name]
+    space = PathSpace(device=device)
+    train_idx, test_idx = train_test_split(dom, 0.3, seed=seed + 1)
+    emu = Emulator(dom, space, device=device, seed=seed)
+    table = emu.explore(train_idx, budget=budget if budget > 0 else None, lam=0)
+    return Deployment(dom, space, emu, table, train_idx, test_idx, device_name)
+
+
+@dataclass
+class Result:
+    accuracy: float
+    cost_per_1k: float
+    latency_s: float
+    overhead_ms: float = 0.0
+    violations: float = 0.0
+
+    def row(self) -> str:
+        o = f"({self.overhead_ms:.0f})" if self.overhead_ms else ""
+        return f"{self.accuracy*100:4.1f}/{self.cost_per_1k:5.2f}/{self.latency_s:5.2f}{o}"
+
+
+def _run_paths(dep: Deployment, choose) -> Result:
+    """choose(qid) -> (path, overhead_s)."""
+    ex = dep.emu.exec
+    accs, lats, costs, ovh = [], [], [], []
+    for qid in dep.test_idx:
+        path, o = choose(qid)
+        a, l, c = ex.run(dep.domain.queries[qid], path)
+        accs.append(a)
+        lats.append(l)
+        costs.append(c)
+        ovh.append(o)
+    return Result(float(np.mean(accs)), float(np.mean(costs) * 1000),
+                  float(np.mean(lats)), float(np.mean(ovh) * 1000))
+
+
+def run_oracle(dep: Deployment, lam: int = 0) -> Result:
+    ex = dep.emu.exec
+
+    def choose(qid):
+        q = dep.domain.queries[qid]
+        rs = np.array([ex.run(q, p) for p in dep.space.paths])
+        j = find_best_path(rs[:, 0], rs[:, 1], rs[:, 2], lam)
+        return dep.space.paths[j], 0.0
+
+    return _run_paths(dep, choose)
+
+
+def best_avg_path_for_model(dep: Deployment, model_impl: str) -> int:
+    """Best-average preprocessing config for a fixed model (paper's baseline
+    normalization: 'all baselines use the best-average preprocessing')."""
+    idx = [j for j, p in enumerate(dep.space.paths) if p.model.impl == model_impl]
+    accs = np.nan_to_num(np.nanmean(dep.table.accuracy[:, idx], axis=0), nan=0.0)
+    return idx[int(np.argmax(accs))]
+
+
+def run_cloud_only(dep: Deployment) -> Result:
+    j = best_avg_path_for_model(dep, "kimi-k2-cloud")
+    return _run_paths(dep, lambda qid: (dep.space.paths[j], 0.0))
+
+
+def run_routellm(dep: Deployment, cloud_frac: float) -> Result:
+    """Difficulty-ranked routing: top X% hardest queries -> cloud tier."""
+    # router: trained on the emulation table — difficulty = 1 - best edge acc
+    edge_paths = [j for j, p in enumerate(dep.space.paths)
+                  if MODEL_CATALOG[p.model.impl].placement == "edge"]
+    train_emb = dep.domain.query_embeddings[dep.train_idx]
+    with np.errstate(invalid="ignore"):
+        edge_best = np.nanmax(dep.table.accuracy[:, edge_paths], axis=1)
+    difficulty = 1.0 - np.nan_to_num(edge_best, nan=0.5)
+    # ridge regression difficulty predictor on embeddings
+    lamb = 1e-2
+    A = train_emb.T @ train_emb + lamb * np.eye(train_emb.shape[1])
+    w = np.linalg.solve(A, train_emb.T @ difficulty)
+
+    # RouteLLM pairs a weak model with the FLAGSHIP (GPT-4-class) model
+    j_cloud = best_avg_path_for_model(dep, "kimi-k2-cloud")
+    edge_impls = [m for m in MODEL_CATALOG
+                  if MODEL_CATALOG[m].placement == "edge"
+                  and any(p.model.impl == m for p in dep.space.paths)]
+    best_edge_impl = max(edge_impls, key=lambda m: np.nan_to_num(
+        np.nanmean(dep.table.accuracy[:, [j for j, p in enumerate(dep.space.paths)
+                                          if p.model.impl == m]]), nan=0.0))
+    j_edge = best_avg_path_for_model(dep, best_edge_impl)
+
+    test_emb = dep.domain.query_embeddings[dep.test_idx]
+    scores = test_emb @ w
+    thresh = np.quantile(scores, 1.0 - cloud_frac)
+
+    lut = {qid: (dep.space.paths[j_cloud] if s >= thresh else dep.space.paths[j_edge])
+           for qid, s in zip(dep.test_idx, scores)}
+    # routing overhead ~ router forward (ms-scale, like RouteLLM)
+    return _run_paths(dep, lambda qid: (lut[qid], 0.004))
+
+
+def run_static(dep: Deployment, lam: int) -> Result:
+    j = build_static_policy(dep.table, lam=lam)
+    return _run_paths(dep, lambda qid: (dep.space.paths[j], 0.0))
+
+
+def run_cca_only(dep: Deployment, lam: int) -> Result:
+    """Ablation Config 2: critical components + raw-embedding 1-NN."""
+    cca = critical_component_analysis(dep.table, lam=lam)
+    train_emb = dep.domain.query_embeddings[dep.train_idx]
+
+    def choose(qid):
+        sims = train_emb @ dep.domain.query_embeddings[qid]
+        nn = int(np.argmax(sims))
+        return dep.table.paths[cca.best_path[nn]], 0.0005
+
+    return _run_paths(dep, choose)
+
+
+def build_rps(dep: Deployment, lam: int, *, dsqe_steps: int = 250,
+              tau: float = 0.03) -> RuntimePathSelector:
+    cca = critical_component_analysis(dep.table, lam=lam, tau=tau)
+    emb = dep.domain.query_embeddings[dep.train_idx]
+    dsqe = train_dsqe(emb, cca.set_ids, len(cca.set_vocab), steps=dsqe_steps, seed=SEED)
+    return RuntimePathSelector(dep.space, dsqe, cca, dep.table, emb, lam=lam)
+
+
+def run_eco(dep: Deployment, lam: int, slo: SLO | None = None,
+            rps: RuntimePathSelector | None = None) -> Result:
+    rps = rps or build_rps(dep, lam)
+    slo = slo or SLO()
+
+    def choose(qid):
+        d = rps.select(dep.domain.query_embeddings[qid], slo)
+        return d.path, d.overhead_s
+
+    return _run_paths(dep, choose)

@@ -1,0 +1,63 @@
+"""Paper Figure 4: SLO attainment — violation rate and accuracy as latency /
+cost constraints sweep from strict to relaxed."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.domains import ALL_DOMAINS
+from repro.core.slo import SLO
+
+from benchmarks.common import build_rps, deploy
+
+LATENCY_GRID = [1.0, 2.0, 4.0, 6.0, 10.0]
+COST_GRID = [0.001, 0.002, 0.004, 0.007, 0.010]  # $/query
+
+
+def run(device: str = "m4", domains=ALL_DOMAINS) -> dict:
+    out = {}
+    for name in domains:
+        dep = deploy(name, device)
+        ex = dep.emu.exec
+        rps_l = build_rps(dep, lam=1)
+        rps_c = build_rps(dep, lam=0)
+        out[name] = {"latency": [], "cost": []}
+        for lmax in LATENCY_GRID:
+            slo = SLO(max_latency_s=lmax)
+            accs, viol = [], 0
+            for qid in dep.test_idx:
+                d = rps_l.select(dep.domain.query_embeddings[qid], slo)
+                a, l, c = ex.run(dep.domain.queries[qid], d.path)
+                accs.append(a)
+                viol += l > lmax
+            out[name]["latency"].append(
+                {"constraint": lmax, "violation_rate": viol / len(dep.test_idx),
+                 "accuracy": float(np.mean(accs))})
+        for cmax in COST_GRID:
+            slo = SLO(max_cost_usd=cmax)
+            accs, viol = [], 0
+            for qid in dep.test_idx:
+                d = rps_c.select(dep.domain.query_embeddings[qid], slo)
+                a, l, c = ex.run(dep.domain.queries[qid], d.path)
+                accs.append(a)
+                viol += c > cmax
+            out[name]["cost"].append(
+                {"constraint": cmax, "violation_rate": viol / len(dep.test_idx),
+                 "accuracy": float(np.mean(accs))})
+    return out
+
+
+def render(results: dict) -> str:
+    lines = []
+    for kind, grid in [("latency", LATENCY_GRID), ("cost", COST_GRID)]:
+        lines.append(f"--- {kind} SLO sweep: violation% (accuracy%) ---")
+        hdr = f"{'domain':13s} | " + " | ".join(f"{g:>12}" for g in grid)
+        lines.append(hdr)
+        for name, row in results.items():
+            cells = [f"{r['violation_rate']*100:3.0f} ({r['accuracy']*100:4.1f})"
+                     for r in row[kind]]
+            lines.append(f"{name:13s} | " + " | ".join(f"{c:>12s}" for c in cells))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render(run()))

@@ -1,0 +1,13 @@
+"""§Roofline deliverable: the 40-cell table from the dry-run artifacts."""
+from __future__ import annotations
+
+from repro.perf.roofline import full_table, render
+
+
+def run(report_path: str = "reports/dryrun_all.json"):
+    return full_table(report_path, "single")
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(render(rows))

@@ -1,0 +1,44 @@
+"""Paper Table 3: performance across edge hardware platforms (automotive +
+smart home).  Exercises device-dependent path spaces (RAM-gated models) and
+device-specific latency profiles."""
+from __future__ import annotations
+
+from benchmarks.common import (deploy, run_cloud_only, run_eco, run_oracle,
+                               run_routellm)
+
+DEVICES = ["a4500", "m4", "m1pro", "orin"]
+DOMAINS = ["automotive", "smarthome"]
+COLS = ["oracle", "gpt41", "r25", "r50", "r75", "eco_c", "eco_l"]
+
+
+def run() -> dict:
+    out = {}
+    for domain in DOMAINS:
+        for dev in DEVICES:
+            dep = deploy(domain, dev)
+            out[(domain, dev)] = {
+                "oracle": run_oracle(dep),
+                "gpt41": run_cloud_only(dep),
+                "r25": run_routellm(dep, 0.25),
+                "r50": run_routellm(dep, 0.50),
+                "r75": run_routellm(dep, 0.75),
+                "eco_c": run_eco(dep, lam=0),
+                "eco_l": run_eco(dep, lam=1),
+            }
+    return out
+
+
+def render(results: dict) -> str:
+    lines = []
+    for domain in DOMAINS:
+        lines.append(f"--- {domain} ---")
+        hdr = f"{'device':8s} | " + " | ".join(f"{c:>18s}" for c in COLS)
+        lines.append(hdr)
+        for dev in DEVICES:
+            row = results[(domain, dev)]
+            lines.append(f"{dev:8s} | " + " | ".join(f"{row[c].row():>18s}" for c in COLS))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render(run()))

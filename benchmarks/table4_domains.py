@@ -1,0 +1,63 @@
+"""Paper Table 4: five domains on M4 — Oracle / GPT-4.1 / RouteLLM-25/50/75 /
+ECO-C / ECO-L.  Format: Accuracy% / $/1k / latency s (selection ms)."""
+from __future__ import annotations
+
+from repro.core.domains import ALL_DOMAINS
+
+from benchmarks.common import (deploy, run_cloud_only, run_eco, run_oracle,
+                               run_routellm)
+
+
+def run(device: str = "m4", domains=ALL_DOMAINS) -> dict:
+    out = {}
+    for name in domains:
+        dep = deploy(name, device)
+        out[name] = {
+            "oracle": run_oracle(dep),
+            "gpt41": run_cloud_only(dep),
+            "r25": run_routellm(dep, 0.25),
+            "r50": run_routellm(dep, 0.50),
+            "r75": run_routellm(dep, 0.75),
+            "eco_c": run_eco(dep, lam=0),
+            "eco_l": run_eco(dep, lam=1),
+        }
+    return out
+
+
+COLS = ["oracle", "gpt41", "r25", "r50", "r75", "eco_c", "eco_l"]
+
+
+def render(results: dict) -> str:
+    hdr = f"{'domain':13s} | " + " | ".join(f"{c:>18s}" for c in COLS)
+    lines = [hdr, "-" * len(hdr)]
+    for name, row in results.items():
+        lines.append(f"{name:13s} | " + " | ".join(f"{row[c].row():>18s}" for c in COLS))
+    return "\n".join(lines)
+
+
+def summarize(results: dict) -> dict:
+    """Paper headline: ECO vs RouteLLM-75 average cost/latency reduction."""
+    import numpy as np
+
+    r75_cost = np.mean([r["r75"].cost_per_1k for r in results.values()])
+    eco_cost = np.mean([r["eco_c"].cost_per_1k for r in results.values()])
+    r75_lat = np.mean([r["r75"].latency_s for r in results.values()])
+    eco_lat = np.mean([r["eco_l"].latency_s for r in results.values()])
+    return {
+        "cost_reduction_vs_r75": 1 - eco_cost / r75_cost,
+        "latency_speedup_vs_r75": r75_lat / eco_lat,
+        "eco_acc_range": (
+            min(min(r["eco_c"].accuracy, r["eco_l"].accuracy) for r in results.values()),
+            max(max(r["eco_c"].accuracy, r["eco_l"].accuracy) for r in results.values()),
+        ),
+        "routellm_acc_range": (
+            min(min(r["r25"].accuracy, r["r75"].accuracy) for r in results.values()),
+            max(max(r["r25"].accuracy, r["r75"].accuracy) for r in results.values()),
+        ),
+    }
+
+
+if __name__ == "__main__":
+    res = run()
+    print(render(res))
+    print(summarize(res))

@@ -1,0 +1,41 @@
+"""Paper Table 5: ablation — Static (Config 1) / CCA-only (Config 2) / full
+ECO-LLM (Config 3), cost-first and latency-first."""
+from __future__ import annotations
+
+from repro.core.domains import ALL_DOMAINS
+
+from benchmarks.common import deploy, run_cca_only, run_eco, run_static
+
+
+def run(device: str = "m4", domains=ALL_DOMAINS) -> dict:
+    out = {}
+    for name in domains:
+        dep = deploy(name, device)
+        out[name] = {}
+        for lam, tag in [(0, "cost"), (1, "lat")]:
+            out[name][f"static_{tag}"] = run_static(dep, lam)
+            out[name][f"cca_{tag}"] = run_cca_only(dep, lam)
+            out[name][f"eco_{tag}"] = run_eco(dep, lam)
+    return out
+
+
+COLS = ["static_cost", "cca_cost", "eco_cost", "static_lat", "cca_lat", "eco_lat"]
+
+
+def render(results: dict) -> str:
+    hdr = f"{'domain':13s} | " + " | ".join(f"{c:>16s}" for c in COLS)
+    lines = [hdr, "-" * len(hdr)]
+    import numpy as np
+
+    for name, row in results.items():
+        lines.append(f"{name:13s} | " + " | ".join(f"{row[c].row():>16s}" for c in COLS))
+    avg = {c: np.mean([results[n][c].latency_s for n in results]) for c in COLS}
+    avgc = {c: np.mean([results[n][c].cost_per_1k for n in results]) for c in COLS}
+    avga = {c: np.mean([results[n][c].accuracy for n in results]) for c in COLS}
+    lines.append(f"{'average':13s} | " + " | ".join(
+        f"{avga[c]*100:4.1f}/{avgc[c]:5.2f}/{avg[c]:5.2f}" for c in COLS))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render(run()))

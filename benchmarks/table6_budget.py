@@ -1,0 +1,47 @@
+"""Paper Table 6: SBA exploration-budget efficiency — accuracy delta of
+reduced budgets (B=2/5/10) vs full exploration."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.domains import ALL_DOMAINS
+from repro.core.slo import SLO
+
+from benchmarks.common import build_rps, deploy, run_eco
+
+BUDGETS = [2.0, 5.0, 10.0]
+
+
+def run(device: str = "m4", domains=ALL_DOMAINS) -> dict:
+    out = {}
+    for name in domains:
+        out[name] = {}
+        full = deploy(name, device, budget=-1.0)  # exhaustive
+        for lam, tag in [(0, "cost"), (1, "lat")]:
+            base = run_eco(full, lam).accuracy
+            for b in BUDGETS:
+                dep = deploy(name, device, budget=b)
+                frac = dep.table.cache_stats["evaluations"] / dep.table.cache_stats["exhaustive_evaluations"]
+                acc = run_eco(dep, lam).accuracy
+                out[name][(tag, b)] = {
+                    "delta_pts": (acc - base) * 100,
+                    "explored_frac": frac,
+                }
+    return out
+
+
+def render(results: dict) -> str:
+    lines = [f"{'domain':13s} | " + " | ".join(
+        f"{tag}-B{int(b)}" for tag in ("cost", "lat") for b in BUDGETS)]
+    for name, row in results.items():
+        cells = []
+        for tag in ("cost", "lat"):
+            for b in BUDGETS:
+                r = row[(tag, b)]
+                cells.append(f"{r['delta_pts']:+5.1f} ({r['explored_frac']*100:2.0f}%)")
+        lines.append(f"{name:13s} | " + " | ".join(cells))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render(run()))

@@ -1,0 +1,31 @@
+"""Assigned-architecture tour: instantiate every arch's reduced config, run a
+train + decode step, and print the full-size dry-run facts (params, shapes).
+
+  PYTHONPATH=src python examples/multiarch_dryrun.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config, runnable_cells
+from repro.models import lm
+
+print(f"{'arch':26s} {'family':7s} {'params':>9s} {'reduced loss':>12s}")
+for arch in ALL_ARCHS:
+    cfg = get_config(arch)
+    r = cfg.reduced()
+    params = lm.init_params(jax.random.key(0), r)
+    tokens = jax.random.randint(jax.random.key(1), (2, 32), 0, r.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if r.frontend == "vision":
+        batch["frontend"] = jnp.zeros((2, r.frontend_len, r.d_model), r.activation_dtype)
+    elif r.frontend == "audio":
+        batch["frontend"] = jnp.zeros((2, 32, r.d_model), r.activation_dtype)
+    loss, _ = lm.train_loss(params, r, batch)
+    n = cfg.param_count()
+    print(f"{arch:26s} {cfg.family:7s} {n/1e9:8.2f}B {float(loss):12.3f}")
+
+print("\nassigned (arch x shape) cells:")
+for arch, shape, status in runnable_cells():
+    mark = "RUN " if status == "run" else "SKIP"
+    print(f"  [{mark}] {arch:26s} {shape:12s} {'' if status == 'run' else status}")
+print("\nfull-size lowering proof: PYTHONPATH=src python -m repro.launch.dryrun")

@@ -1,0 +1,37 @@
+"""Quickstart: the full ECO-LLM lifecycle in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Build a domain (synthetic corpus + queries, the paper's Context Generator)
+2. Explore the path space with the Emulator (Stratified Budget Allocation)
+3. Train the runtime (CCA -> DSQE)
+4. Serve queries under an SLO and inspect decisions
+"""
+import numpy as np
+
+from repro.core.slo import SLO
+from repro.launch.serve import build_server
+from repro.runtime.server import Request
+
+server, test_idx = build_server("automotive", n_queries=100, budget=4.0)
+
+slo = SLO(max_latency_s=2.0, max_cost_usd=0.005)
+print(f"path space: {len(server.rps.space)} resolution paths")
+print(f"critical component sets discovered: {len(server.rps.cca.set_vocab)}\n")
+
+for qid in test_idx[:5]:
+    resp = server.handle(Request(prompt="", qid=qid, slo=slo))
+    q = server.domain.queries[qid]
+    print(f"[{q.qtype:14s}] path={resp.path_key}")
+    print(f"   accuracy={resp.accuracy:.2f} ttft={resp.latency_s:.2f}s "
+          f"cost=${resp.cost_usd*1000:.2f}/1k sel={resp.selection_overhead_s*1e3:.1f}ms "
+          f"slo_ok={resp.slo_ok}")
+
+accs, lats = [], []
+for qid in test_idx:
+    r = server.handle(Request(prompt="", qid=qid, slo=slo))
+    accs.append(r.accuracy)
+    lats.append(r.latency_s)
+print(f"\n{len(test_idx)} held-out queries: accuracy {np.mean(accs)*100:.1f}%, "
+      f"mean TTFT {np.mean(lats):.2f}s")
+print("system:", server.system_state())

@@ -1,0 +1,42 @@
+"""SLO-aware serving example: the same deployment under different
+cost/latency contracts (paper Fig. 4 behaviour), plus fault injection to
+exercise the fleet's failover + hedging.
+
+  PYTHONPATH=src python examples/slo_serving.py
+"""
+import numpy as np
+
+from repro.core.slo import SLO
+from repro.launch.serve import build_server
+from repro.runtime.server import Request
+
+server, test_idx = build_server("techqa", n_queries=100, budget=4.0, n_replicas=3)
+
+print("=== one deployment, three SLO contracts ===")
+for name, slo in [
+    ("strict-latency", SLO(max_latency_s=1.0)),
+    ("strict-cost  ", SLO(max_cost_usd=0.002)),
+    ("relaxed      ", SLO()),
+]:
+    accs, lats, costs, viol = [], [], [], 0
+    for qid in test_idx:
+        r = server.handle(Request(prompt="", qid=qid, slo=slo))
+        accs.append(r.accuracy)
+        lats.append(r.latency_s)
+        costs.append(r.cost_usd)
+        viol += not r.slo_ok
+    print(f"{name}: acc {np.mean(accs)*100:4.1f}%  ttft {np.mean(lats):5.2f}s  "
+          f"${np.mean(costs)*1000:5.2f}/1k  violations {viol}/{len(test_idx)}")
+
+print("\n=== fault injection: one replica straggles, one dies ===")
+server.fleet.replicas[0].straggle_rate = 0.5
+server.fleet.replicas[1].fail_rate = 1.0
+for qid in test_idx[:40]:
+    server.handle(Request(prompt="", qid=qid, slo=SLO()))
+print("system after faults:", server.system_state())
+print("(hedges > 0 -> stragglers were tail-hedged; failovers > 0 -> dead "
+      "replica evicted, requests retried)")
+
+print("\n=== elastic scale-out ===")
+server.fleet.scale_to(5)
+print("live replicas:", len(server.fleet.live()))

@@ -1,0 +1,15 @@
+"""ECO-LLM core: the paper's contribution as a composable JAX library.
+
+Two subsystems (paper §3):
+  * Emulator — path-space exploration with Stratified Budget Allocation,
+    prefix caching, and per-(query, path) metric collection.
+  * Runtime — Critical Component Analysis, Domain-Specific Query Encoding
+    (projection + prototypes trained with contrastive/diversity/reg losses),
+    and Runtime Path Selection under SLO constraints.
+"""
+from repro.core.paths import PathSpace, Path  # noqa: F401
+from repro.core.emulator import Emulator, EvalTable  # noqa: F401
+from repro.core.cca import critical_component_analysis  # noqa: F401
+from repro.core.dsqe import DSQE, train_dsqe  # noqa: F401
+from repro.core.rps import RuntimePathSelector  # noqa: F401
+from repro.core.slo import SLO  # noqa: F401

@@ -1,0 +1,49 @@
+"""Vector retrieval substrate: exact top-k and an IVF (k-means) index.
+
+The emulator's RAG components run *real* retrieval over the domain corpus
+embeddings; retrieval recall (did the context include the ground-truth
+chunks?) is a measured quantity, not a modeled one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.kmeans import kmeans
+
+
+@dataclass
+class SearchResult:
+    ids: np.ndarray  # (k,)
+    scores: np.ndarray  # (k,)
+
+
+class VectorStore:
+    """Exact dot-product search with an optional IVF coarse quantizer."""
+
+    def __init__(self, embeddings: np.ndarray, n_clusters: int = 0, seed: int = 0):
+        self.emb = embeddings.astype(np.float32)
+        self.n = embeddings.shape[0]
+        self.ivf = None
+        if n_clusters and n_clusters < self.n:
+            centroids, assign = kmeans(self.emb, n_clusters, seed=seed)
+            self.ivf = {
+                "centroids": centroids,
+                "lists": [np.where(assign == c)[0] for c in range(n_clusters)],
+            }
+
+    def search(self, query: np.ndarray, k: int, nprobe: int = 4) -> SearchResult:
+        if self.ivf is None:
+            scores = self.emb @ query
+            idx = np.argpartition(-scores, min(k, self.n - 1))[:k]
+            idx = idx[np.argsort(-scores[idx])]
+            return SearchResult(idx, scores[idx])
+        cscores = self.ivf["centroids"] @ query
+        probes = np.argsort(-cscores)[:nprobe]
+        cand = np.concatenate([self.ivf["lists"][c] for c in probes]) if len(probes) else np.arange(self.n)
+        if cand.size == 0:
+            cand = np.arange(self.n)
+        scores = self.emb[cand] @ query
+        top = np.argsort(-scores)[:k]
+        return SearchResult(cand[top], scores[top])

@@ -1,0 +1,136 @@
+"""Runtime Path Selection (paper §3.3.4, Algorithm 3).
+
+Online per-query decision:
+  1. project the query embedding with the trained DSQE; nearest prototype
+     reveals the critical component set;
+  2. filter paths: SLO-feasible ∧ critical set ⊆ path (Eq. 13);
+  3. score surviving paths by similarity-weighted kNN over training queries
+     (Eq. 14) and pick the argmax;
+  4. fallback for out-of-distribution queries (no valid path): best global
+     path honoring the critical set, cheapest above the accuracy bar.
+
+The whole decision is a handful of matvecs over precomputed tables — the
+fused Pallas kernel (`repro.kernels.dsqe_score`) executes steps 1-3 in one
+VMEM-resident pass on TPU; this module is the reference implementation and
+the CPU path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cca import CCAResult, find_best_path
+from repro.core.dsqe import DSQE
+from repro.core.emulator import EvalTable
+from repro.core.paths import MODULES, Path, PathSpace
+from repro.core.slo import SLO
+
+
+@dataclass
+class Decision:
+    path: Path
+    set_id: int
+    used_fallback: bool
+    overhead_s: float
+    expected_latency_s: float
+    expected_cost_usd: float
+
+
+class RuntimePathSelector:
+    def __init__(self, space: PathSpace, dsqe: DSQE, cca: CCAResult,
+                 table: EvalTable, train_embeddings: np.ndarray,
+                 *, lam: int = 0, knn: int = 8, acc_floor: float = 0.5,
+                 use_kernel: bool = False):
+        self.space = space
+        self.dsqe = dsqe
+        self.cca = cca
+        self.table = table
+        self._train_embeddings = train_embeddings
+        self.lam = lam  # 0 cost-first, 1 latency-first
+        self.knn = knn
+        self.acc_floor = acc_floor
+        self.use_kernel = use_kernel
+        t = self.table
+        P = len(t.paths)
+        # per-path expected latency/cost: mean over evaluated queries
+        with np.errstate(invalid="ignore"):
+            self.path_latency = np.nanmean(t.latency, axis=0)
+            self.path_cost = np.nanmean(t.cost, axis=0)
+            self.path_mean_acc = np.nanmean(t.accuracy, axis=0)
+        self.path_latency = np.nan_to_num(self.path_latency, nan=np.inf)
+        self.path_cost = np.nan_to_num(self.path_cost, nan=np.inf)
+        self.path_mean_acc = np.nan_to_num(self.path_mean_acc, nan=0.0)
+
+        K = len(self.cca.set_vocab)
+        self.path_contains_set = np.zeros((K, P), bool)
+        for k, req in enumerate(self.cca.set_vocab):
+            for j, p in enumerate(t.paths):
+                self.path_contains_set[k, j] = p.contains(req)
+
+        import jax.numpy as jnp  # local: keep module import light
+
+        self.train_emb_proj = np.asarray(self.dsqe.project(jnp.asarray(self._train_embeddings)))
+        self.train_best_path = np.array(self.cca.best_path, np.int64)
+        rows = np.arange(len(t.query_ids))
+        self.train_best_acc = t.accuracy[rows, self.train_best_path]
+
+    # -- Algorithm 3 ----------------------------------------------------------
+
+    def select(self, query_emb: np.ndarray, slo: SLO) -> Decision:
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        z = np.asarray(self.dsqe.project(jnp.asarray(query_emb[None])))[0]
+        protos = self.dsqe.params["protos"]
+        protos = protos / np.maximum(np.linalg.norm(protos, axis=-1, keepdims=True), 1e-6)
+        set_id = int(np.argmax(protos @ z))
+
+        feasible = (
+            (self.path_latency <= slo.max_latency_s)
+            & (self.path_cost <= slo.max_cost_usd)
+            & self.path_contains_set[set_id]
+        )
+        sims = self.train_emb_proj @ z  # (N,)
+        if not feasible.any():
+            path = self._fallback(set_id, slo)
+            j = self.table.paths.index(path)
+            return Decision(path, set_id, True, time.perf_counter() - t0,
+                            float(self.path_latency[j]), float(self.path_cost[j]))
+
+        # Eq. 14: sum over k nearest training queries of w_q * A(q, P_q) * I[P_q == P]
+        k = min(self.knn, sims.shape[0])
+        nn = np.argpartition(-sims, k - 1)[:k]
+        w = np.maximum(sims[nn], 0.0)
+        scores = np.zeros(len(self.table.paths))
+        np.add.at(scores, self.train_best_path[nn], w * np.nan_to_num(self.train_best_acc[nn]))
+        # break ties / unseen paths with global mean accuracy prior
+        scores = scores + 1e-3 * self.path_mean_acc
+        scores[~feasible] = -np.inf
+        j = int(np.argmax(scores))
+        return Decision(self.table.paths[j], set_id, False, time.perf_counter() - t0,
+                        float(self.path_latency[j]), float(self.path_cost[j]))
+
+    def _fallback(self, set_id: int, slo: SLO) -> Path:
+        """OOD fallback (Algorithm 3 lines 10-11): respect the critical set,
+        demand accuracy above the floor, minimize cost (λ=0) / latency."""
+        mask = self.path_contains_set[set_id] & (self.path_mean_acc >= self.acc_floor)
+        if not mask.any():
+            mask = self.path_mean_acc >= self.acc_floor
+        if not mask.any():
+            mask = np.ones(len(self.table.paths), bool)
+        second = self.path_latency if self.lam == 1 else self.path_cost
+        cand = np.where(mask)[0]
+        return self.table.paths[int(cand[np.argmin(second[cand])])]
+
+
+def build_static_policy(table: EvalTable, lam: int, tol: float = 0.02) -> int:
+    """Ablation Config 1 (paper §5.4): single best-average path — filter to
+    within ``tol`` of best mean accuracy, then min cost/latency."""
+    acc = np.nan_to_num(np.nanmean(table.accuracy, axis=0), nan=0.0)
+    lat = np.nan_to_num(np.nanmean(table.latency, axis=0), nan=np.inf)
+    cost = np.nan_to_num(np.nanmean(table.cost, axis=0), nan=np.inf)
+    cand = np.where(acc >= acc.max() - tol)[0]
+    second = lat if lam == 1 else cost
+    return int(cand[np.argmin(second[cand])])

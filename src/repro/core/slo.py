@@ -1,0 +1,33 @@
+"""Service Level Objectives (paper Eq. 4) and violation accounting."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SLO:
+    max_latency_s: float = float("inf")
+    max_cost_usd: float = float("inf")  # per query
+
+    def ok(self, latency_s: float, cost_usd: float) -> bool:
+        return latency_s <= self.max_latency_s and cost_usd <= self.max_cost_usd
+
+
+@dataclass
+class SLOTracker:
+    total: int = 0
+    latency_violations: int = 0
+    cost_violations: int = 0
+
+    def record(self, slo: SLO, latency_s: float, cost_usd: float) -> None:
+        self.total += 1
+        if latency_s > slo.max_latency_s:
+            self.latency_violations += 1
+        if cost_usd > slo.max_cost_usd:
+            self.cost_violations += 1
+
+    @property
+    def violation_rate(self) -> float:
+        if not self.total:
+            return 0.0
+        return (self.latency_violations + self.cost_violations) / self.total

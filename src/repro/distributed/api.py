@@ -1,0 +1,83 @@
+"""Decoupling shim between model code and the active sharding policy.
+
+Model code calls ``constrain(x, "act_btd")`` with a *logical* activation name;
+if a sharding policy is installed (see ``repro.distributed.sharding``) the
+array is constrained with ``jax.lax.with_sharding_constraint``, otherwise the
+call is the identity.  This lets the same model run on one CPU device in smoke
+tests and on a 512-chip mesh in the dry-run without code changes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _policy() -> Optional["ActivationPolicy"]:
+    return getattr(_state, "policy", None)
+
+
+class ActivationPolicy:
+    """Maps logical activation names -> PartitionSpec under a mesh.
+
+    Constraints are *best-effort*: any dim whose size is not divisible by the
+    requested axis-set is silently left unsharded (e.g. batch=1 long-context
+    decode can't shard its batch dim; 56 query heads can't split 16 ways).
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh, rules: dict[str, jax.sharding.PartitionSpec]):
+        self.mesh = mesh
+        self.rules = rules
+
+    def _axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def fit_spec(self, spec: jax.sharding.PartitionSpec, shape: tuple[int, ...]):
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        fitted = [
+            (ax if dim % self._axis_size(ax) == 0 else None)
+            for ax, dim in zip(parts, shape)
+        ]
+        return jax.sharding.PartitionSpec(*fitted)
+
+    def constrain(self, x, name: str):
+        spec = self.rules.get(name)
+        if spec is None:
+            return x
+        if len(spec) > x.ndim:
+            return x
+        sharding = jax.sharding.NamedSharding(self.mesh, self.fit_spec(spec, x.shape))
+        return jax.lax.with_sharding_constraint(x, sharding)
+
+
+@contextlib.contextmanager
+def activation_policy(policy: Optional[ActivationPolicy]):
+    prev = _policy()
+    _state.policy = policy
+    try:
+        yield
+    finally:
+        _state.policy = prev
+
+
+def constrain(x, name: str):
+    p = _policy()
+    if p is None:
+        return x
+    return p.constrain(x, name)
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    p = _policy()
+    return p.mesh if p is not None else None

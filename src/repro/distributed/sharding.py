@@ -1,0 +1,226 @@
+"""Parameter / activation / cache sharding policy.
+
+One rule engine covers every architecture in the zoo:
+
+  * TP ("model" axis): attention heads, FFN hidden dim, MoE expert dim,
+    vocab dim of embedding/head, recurrent inner dims.
+  * FSDP (all data axes, incl. the "pod" axis multi-pod): the remaining
+    large dim of each weight — so a 1T-param MoE spreads its experts over
+    model x data = the full 512-chip machine.
+  * DP: batch dim of activations / caches / inputs over the data axes.
+  * KV heads replicate when n_kv < |model| (GQA with few KV heads), like
+    MaxText; dims that don't divide fall back to replication per-dim.
+
+The policy is pure data (PartitionSpecs); models consume it through
+``repro.distributed.api.constrain`` and the step builders in
+``repro.launch.steps``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.api import ActivationPolicy
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+
+@dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    sequence_parallel: bool = False  # Megatron-SP style activation sharding
+    dp_axes: tuple[str, ...] = field(init=False)
+    tp_axis: str = "model"
+
+    def __post_init__(self):
+        self.dp_axes = tuple(a for a in self.mesh.axis_names if a != self.tp_axis)
+
+    # -- axis helpers -------------------------------------------------------
+    def _size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def dp(self, dim: int):
+        """Largest data-axis set that divides ``dim`` (greedy suffixes)."""
+        for k in range(len(self.dp_axes)):
+            axes = self.dp_axes[k:]
+            if dim % self._size(axes) == 0:
+                return axes if len(axes) > 1 else axes[0]
+        return None
+
+    def tp(self, dim: int):
+        return self.tp_axis if dim % self._size(self.tp_axis) == 0 else None
+
+    # -- parameters ---------------------------------------------------------
+    def param_pspecs(self, cfg: ModelConfig, params_shapes: Pytree) -> Pytree:
+        """PartitionSpec pytree matching ``jax.eval_shape(init_params, ...)``."""
+
+        def rule(path, leaf) -> P:
+            keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+            name = keys[-1] if isinstance(keys[-1], str) else ""
+            in_moe = "moe" in keys and "shared" not in keys
+            stacked = "units" in keys and cfg.scan_layers
+            shape = leaf.shape
+            tail = shape[1:] if stacked else shape
+
+            def spec(*tail_axes) -> P:
+                fitted = [
+                    (ax if d % self._size(ax) == 0 else None) if ax is not None else None
+                    for ax, d in zip(tail_axes, tail)
+                ]
+                if stacked:
+                    fitted = [None] + fitted
+                return P(*fitted)
+
+            dp, tp = self.dp_axes, self.tp_axis
+            if name == "embed":
+                # tied: vocab over model (the transpose serves as the head).
+                # untied: D over data (local gather; the small all-to-all to
+                # batch-sharded activations beats a vocab-masked psum).
+                if cfg.tie_embeddings:
+                    return spec(tp, None)
+                return spec(None, dp)
+            if name == "head":
+                # Megatron-style vocab-only sharding: logits matmul is local,
+                # only tiny (B,S) logsumexp partials cross the model axis —
+                # vs multi-GB per-chunk logit all-reduces under (dp, tp).
+                return spec(None, tp)
+            if name in ("frontend_proj",):
+                return spec(dp, tp)
+            if name == "wq":
+                return spec(dp, tp, None)
+            if name in ("wk", "wv"):
+                return spec(dp, tp, None)  # replicates when n_kv < |model|
+            if name == "wo":
+                return spec(tp, None, dp)
+            if in_moe and name in ("w_gate", "w_up"):
+                return spec(tp, dp, None)  # (E, D, F): experts x model, D x data
+            if in_moe and name == "w_down":
+                return spec(tp, None, dp)
+            if name == "router":
+                return spec(None, None)
+            if name in ("w_gate", "w_up"):  # dense/shared MLP (D, F)
+                return spec(dp, tp)
+            if name == "w_down":  # (F, D)
+                return spec(tp, dp)
+            # recurrent families ------------------------------------------
+            if name in ("w_x", "w_gate_in"):  # (D, R)
+                return spec(dp, tp)
+            if name == "w_out":  # (R, D) / slstm (D, D)
+                return spec(tp, dp)
+            if name in ("w_a", "w_i", "w_f", "w_z", "w_o") and len(tail) == 2:
+                return spec(dp, tp)
+            if name.startswith("r_") and len(tail) == 3:  # slstm (NH, dh, dh)
+                return spec(tp, None, None)
+            # norms, biases, conv weights, gates: replicate
+            return P(*([None] * len(shape)))
+
+        return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+    def param_shardings(self, cfg: ModelConfig, params_shapes: Pytree) -> Pytree:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_pspecs(cfg, params_shapes))
+
+    # -- optimizer state ----------------------------------------------------
+    def opt_pspecs(self, optimizer_name: str, param_pspecs: Pytree, params_shapes: Pytree) -> Pytree:
+        if optimizer_name == "adamw":
+            return {"m": param_pspecs, "v": param_pspecs}
+        if optimizer_name == "sgd":
+            return {"m": param_pspecs}
+        if optimizer_name == "adafactor":
+            def per_leaf(spec: P, sds) -> dict:
+                if sds.ndim >= 2:
+                    parts = list(spec) + [None] * (sds.ndim - len(spec))
+                    return {"row": P(*parts[:-1]), "col": P(*(parts[:-2] + parts[-1:]))}
+                return {"v": spec}
+
+            return jax.tree.map(per_leaf, param_pspecs, params_shapes)
+        raise ValueError(optimizer_name)
+
+    # -- activations --------------------------------------------------------
+    def activation_rules(self) -> dict[str, P]:
+        dp, tp = self.dp_axes, self.tp_axis
+        seq = tp if self.sequence_parallel else None
+        return {
+            "act_btd": P(dp, seq, None),
+            "act_btf": P(dp, None, tp),
+            "act_btr": P(dp, None, tp),
+            "act_bshd": P(dp, None, tp, None),
+            "act_bskd": P(dp, None, tp, None),
+            "attn_bhsd": P(dp, tp, None, None),
+            "act_btv": P(dp, None, tp),
+            "moe_idx": P(dp, tp, None),
+            "moe_dispatch": P(dp, tp, None, None),
+            "moe_hidden": P(dp, tp, None, None),
+        }
+
+    def activation_policy(self) -> ActivationPolicy:
+        return ActivationPolicy(self.mesh, self.activation_rules())
+
+    # -- step inputs --------------------------------------------------------
+    def data_pspec(self, shape: tuple[int, ...]) -> P:
+        """Batch-leading arrays (tokens, labels, frontend embeds)."""
+        parts = [self.dp(shape[0])] + [None] * (len(shape) - 1)
+        return P(*parts)
+
+    def data_sharding(self, sds) -> NamedSharding:
+        return NamedSharding(self.mesh, self.data_pspec(sds.shape))
+
+    def cache_pspecs(self, cache_shapes: Pytree) -> Pytree:
+        """Serve caches: batch over data axes; KV-head / state dims over
+        model.  Rules address dims from the END so the same rule covers both
+        plain (B, ...) and scan-stacked (n_units, B, ...) layouts."""
+
+        # per-leaf-name: (batch_dim_from_end, {dim_from_end: axis_kind})
+        rules = {
+            "k": (4, {2: "tp"}),       # (B, W, Kv, hd); see seq fallback below
+            "v": (4, {2: "tp"}),
+            "C": (4, {3: "tp"}),       # mlstm (B, NH, dh, dh)
+            "n": (3, {2: "tp"}),       # mlstm normalizer (B, NH, dh)
+            "m": (2, {1: "tp"}),       # mlstm stabilizer (B, NH)
+            "h": (2, {1: "tp"}),       # rglru/slstm state (B, R)
+            "c": (2, {1: "tp"}),       # slstm cell (B, D)
+            "conv": (3, {1: "tp"}),    # rglru conv history (B, W-1, R)
+        }
+
+        def rule(path, leaf) -> P:
+            keys = [getattr(p, "key", None) for p in path]
+            name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+            shape = leaf.shape
+            parts: list = [None] * len(shape)
+            r = rules.get(name)
+            if r is not None and len(shape) >= r[0]:
+                b_idx = len(shape) - r[0]
+                parts[b_idx] = self.dp(shape[b_idx])
+                for from_end, kind in r[1].items():
+                    i = len(shape) - from_end
+                    parts[i] = self.tp(shape[i]) if kind == "tp" else self.dp(shape[i])
+                if name in ("k", "v") and parts[len(shape) - 2] is None:
+                    # GQA with n_kv < |model|: shard the SEQUENCE dim instead
+                    # (flash-decoding style) — attention reductions over the
+                    # cache become small psums instead of full-cache gathers.
+                    w_idx = len(shape) - 3
+                    parts[w_idx] = self.tp(shape[w_idx])
+            elif shape:
+                parts[0] = self.dp(shape[0])
+            return P(*parts)
+
+        return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def shardings_of(self, pspec_tree: Pytree) -> Pytree:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), pspec_tree,
+                            is_leaf=lambda x: isinstance(x, P))

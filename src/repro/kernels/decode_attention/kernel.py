@@ -1,0 +1,120 @@
+"""Decode attention Pallas TPU kernel (flash-decoding style split-K).
+
+One new token per sequence attends to a long (possibly ring-buffered) KV
+cache.  The cache's sequence axis is split across the grid's last dimension;
+each split folds its slice into VMEM online-softmax state, so the kernel is
+bandwidth-bound streaming of K/V through VMEM — the roofline-optimal shape
+for decode (FLOPs are negligible; HBM->VMEM traffic is everything).
+
+Ring-buffer semantics (local/chunked attention): slot j of a ring of width W
+holds absolute position  p_j = qpos - ((qpos - j) mod W).  The kernel masks
+slots by validity (p_j >= 0) and, for Llama-4-style chunked attention, by
+p_j >= chunk_start.  ``cache_len`` arrives via scalar prefetch (SMEM).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                   scale: float, ring: bool, chunk_attn: int, block_k: int,
+                   n_splits: int, width: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, hd) — q heads of this kv group
+    k = k_ref[0, 0].astype(jnp.float32)  # (Bk, hd)
+    v = v_ref[0, 0]  # (Bk, hd)
+    cache_len = len_ref[0]
+    qpos = cache_len - 1
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (H, Bk)
+
+    slots = si * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    if ring:
+        abs_pos = qpos - jax.lax.rem(qpos - slots + width * 4, width)
+        valid = abs_pos >= 0
+        if chunk_attn:
+            valid &= abs_pos >= (qpos // chunk_attn) * chunk_attn
+    else:
+        valid = slots < cache_len
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_blk = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_blk)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(si == n_splits - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ring", "chunk_attn", "block_k", "interpret", "scale"),
+)
+def decode_attention_kernel(
+    q: jax.Array,  # (B, Kv, H_per_kv, hd) — queries grouped by kv head
+    k_cache: jax.Array,  # (B, Kv, W, hd)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # (1,) int32
+    *,
+    ring: bool = False,
+    chunk_attn: int = 0,
+    block_k: int = 512,
+    interpret: bool = False,
+    scale: float = 0.0,
+) -> jax.Array:
+    B, Kv, G, hd = q.shape
+    W = k_cache.shape[2]
+    block_k = min(block_k, W)
+    assert W % block_k == 0, (W, block_k)
+    n_splits = W // block_k
+    scale = scale or 1.0 / math.sqrt(hd)  # caller passes the UNPADDED scale
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, ring=ring, chunk_attn=chunk_attn,
+        block_k=block_k, n_splits=n_splits, width=W,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Kv, n_splits),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, s, *_: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, s, *_: (b, h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+        interpret=interpret,
+    )(cache_len, q, k_cache, v_cache)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for decode attention (mirrors layers.decode_attention_xla)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, W, Kv, hd)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # scalar int32
+    *,
+    ring: bool = False,
+    chunk_attn: int = 0,
+) -> jax.Array:
+    B, _, H, hd = q.shape
+    W, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, Kv, G, hd)
+    s = jnp.einsum("bkgh,bukh->bkgu", qr.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    slots = jnp.arange(W)
+    qpos = cache_len - 1
+    if ring:
+        abs_pos = qpos - jnp.mod(qpos - slots, W)
+        valid = abs_pos >= 0
+        if chunk_attn:
+            valid &= abs_pos >= (qpos // chunk_attn) * chunk_attn
+    else:
+        valid = slots < cache_len
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgu,bukh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

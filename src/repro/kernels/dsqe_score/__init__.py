@@ -1,0 +1,1 @@
+from repro.kernels.dsqe_score.ops import dsqe_score  # noqa: F401

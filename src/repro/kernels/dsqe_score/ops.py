@@ -1,0 +1,47 @@
+"""Public wrapper for the fused RPS scoring kernel (lane padding)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dsqe_score.kernel import dsqe_score_kernel
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad2(x, m0, m1, fill=0.0):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=fill)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "interpret"))
+def dsqe_score(q, protos, train, path_weights, contains, lat, cost, slo,
+               *, temperature: float = 0.05, interpret: bool | None = None):
+    """Batched fused path selection.  Returns (masked scores (Bq, P), set_id).
+
+    Shapes: q (Bq,d), protos (K,d), train (N,d), path_weights (N,P),
+    contains (K,P), lat/cost (P,), slo (2,).
+    """
+    if interpret is None:
+        interpret = not _is_tpu()
+    Bq, P = q.shape[0], path_weights.shape[1]
+    q_p = _pad2(q, 8, 128)
+    protos_p = _pad2(protos, 8, 128)  # kernel masks rows >= k_valid
+    train_p = _pad2(train, 8, 128)  # kernel masks rows >= n_valid
+    pw_p = _pad2(path_weights, train_p.shape[0], 128)[: train_p.shape[0]]
+    ct_p = _pad2(contains, protos_p.shape[0], 128)[: protos_p.shape[0]]
+    lat_p = _pad2(lat.reshape(1, -1), 1, 128, fill=jnp.inf)
+    cost_p = _pad2(cost.reshape(1, -1), 1, 128, fill=jnp.inf)
+    scores, set_id = dsqe_score_kernel(
+        q_p, protos_p, train_p, pw_p, ct_p, lat_p, cost_p,
+        jnp.asarray(slo, jnp.float32), temperature=temperature, interpret=interpret,
+        k_valid=protos.shape[0], n_valid=train.shape[0],
+    )
+    return scores[:Bq, :P], set_id[:Bq, 0]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused RPS scoring kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def dsqe_score_ref(q, protos, train, path_weights, contains, lat, cost, slo,
+                   temperature: float = 0.05):
+    psims = q @ protos.T  # (Bq, K)
+    set_id = jnp.argmax(psims, axis=1)
+    set_onehot = (psims >= psims.max(axis=1, keepdims=True)).astype(jnp.float32)
+    tsims = q @ train.T
+    w = jax.nn.softmax(tsims / temperature, axis=1)
+    scores = w @ path_weights
+    feas_set = set_onehot @ contains
+    feasible = (feas_set > 0.5) & (lat <= slo[0]) & (cost <= slo[1])
+    return jnp.where(feasible, scores, NEG_INF), set_id.astype(jnp.int32)[:, None]

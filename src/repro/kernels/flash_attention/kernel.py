@@ -1,0 +1,135 @@
+"""Flash attention Pallas TPU kernel (prefill / train forward).
+
+Tiling: grid = (B, H, n_q, n_kv); the kv dim iterates fastest so the online
+softmax state for one (b, h, q-tile) lives in VMEM scratch across kv steps.
+Causal / sliding-window / chunked masks skip fully-masked kv tiles via
+``pl.when`` — on TPU the MXU work for skipped tiles is never issued, which is
+how the kernel reaches the causal-optimal FLOP count the XLA chunked fallback
+cannot express (it must compute every block and mask).
+
+VMEM budget per step (defaults Bq=Bk=512, hd<=256, fp32 scratch):
+  q tile 512*256*4 = 512 KB, k/v tiles 512 KB each, acc 512 KB -> ~2 MB,
+  comfortably inside the ~16 MB v5e VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      scale: float, causal: bool, window: int, chunk_attn: int,
+                      block_q: int, block_k: int, n_kv: int, kv_valid: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile-level skip: is any (q, k) pair in this tile unmasked?
+    q_lo = qi * block_q
+    k_lo = ki * block_k
+    live = k_lo < kv_valid
+    if causal:
+        live &= k_lo <= q_lo + block_q - 1
+    if window:
+        live &= (q_lo - (k_lo + block_k - 1)) < window
+    if chunk_attn:
+        live &= (q_lo // chunk_attn) <= ((k_lo + block_k - 1) // chunk_attn)
+        live &= ((k_lo // chunk_attn) <= (q_lo + block_q - 1) // chunk_attn)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (Bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (Bk, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (Bq, Bk)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < kv_valid
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        if chunk_attn:
+            mask &= (qpos // chunk_attn) == (kpos // chunk_attn)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_blk = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "chunk_attn", "block_q", "block_k",
+                     "kv_valid", "interpret", "scale"),
+)
+def flash_attention_kernel(
+    q: jax.Array,  # (B, H, Sq, hd)  — head-major layout, hd multiple of 128
+    k: jax.Array,  # (B, H, Skv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk_attn: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    kv_valid: int = 0,
+    interpret: bool = False,
+    scale: float = 0.0,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    Skv = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, block_q, Skv, block_k)
+    n_q, n_kv = Sq // block_q, Skv // block_k
+    kv_valid = kv_valid or Skv
+    scale = scale or 1.0 / math.sqrt(hd)  # caller passes the UNPADDED scale
+
+    kernel = functools.partial(
+        _attention_kernel, scale=scale, causal=causal, window=window,
+        chunk_attn=chunk_attn, block_q=block_q, block_k=block_k, n_kv=n_kv,
+        kv_valid=kv_valid,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, Kv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk_attn: int = 0,
+    kv_valid: int = 0,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    if H != Kv:
+        k = jnp.repeat(k, H // Kv, axis=2)
+        v = jnp.repeat(v, H // Kv, axis=2)
+    s = jnp.einsum("bthd,buhd->bhtu", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if kv_valid:
+        mask &= kp < kv_valid
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= qp - kp < window
+    if chunk_attn:
+        mask &= (qp // chunk_attn) == (kp // chunk_attn)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhtu,buhd->bthd", p, v.astype(jnp.float32)).astype(q.dtype)

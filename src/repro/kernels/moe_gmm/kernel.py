@@ -1,0 +1,67 @@
+"""Grouped expert matmul Pallas TPU kernel (capacity-layout MoE FFN).
+
+Computes out[e] = x[e] @ w[e] for every expert slice of the dispatched
+(E, C, D) activation block — the compute core of the MoE layer after
+scatter-free permutation.  Grid = (E, C/Bm, F/Bn, D/Bk) with a fp32 VMEM
+accumulator across the contraction dim; expert weight tiles are indexed by
+the leading grid coordinate, so each expert's weights stream through VMEM
+exactly once per (m, n) tile row — the MegaBlocks-style schedule specialized
+to the uniform-capacity layout (no indirection needed: slot -> expert is
+slot // C, a static map).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def moe_gmm_kernel(
+    x: jax.Array,  # (E, C, D) dispatched tokens
+    w: jax.Array,  # (E, D, F) expert weights
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    E, C, D = x.shape
+    F = w.shape[2]
+    block_m = min(block_m, C)
+    block_n = min(block_n, F)
+    block_k = min(block_k, D)
+    assert C % block_m == 0 and F % block_n == 0 and D % block_k == 0
+    grid = (E, C // block_m, F // block_n, D // block_k)
+    kernel = functools.partial(_gmm_kernel, n_k=grid[3])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k), lambda e, m, n, k: (e, m, k)),
+            pl.BlockSpec((1, block_k, block_n), lambda e, m, n, k: (e, k, n)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n), lambda e, m, n, k: (e, m, n)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

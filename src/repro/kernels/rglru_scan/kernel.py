@@ -1,0 +1,66 @@
+"""RG-LRU diagonal linear recurrence Pallas TPU kernel.
+
+Computes h_t = a_t * h_{t-1} + x_t (elementwise over the channel dim) in
+chunks: the grid's time dimension iterates sequentially per batch row, the
+carry h lives in VMEM scratch between chunk steps, and within a chunk a small
+fori loop runs vectorized (8, 128)-lane updates.  This is the TPU-native
+shape of Griffin's recurrence: HBM traffic is exactly one read of (a, x) and
+one write of h — the op is bandwidth-bound, so the kernel's job is to keep
+the VPU fed while streaming, not to add FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, x_ref, h0_ref, o_ref, h_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (chunk, R)
+    x = x_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + x[t]
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_scan_kernel(
+    a: jax.Array,  # (B, S, R) decay in [0, 1)
+    x: jax.Array,  # (B, S, R) scaled inputs
+    h0: jax.Array,  # (B, R) initial state
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, R = a.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    kernel = functools.partial(_rglru_kernel, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, R), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, R), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, R), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, R), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, R), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((R,), jnp.float32)],
+        interpret=interpret,
+    )(a, x, h0)

@@ -1,0 +1,31 @@
+"""Public wrapper for the RG-LRU scan kernel (padding to lane multiples)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_kernel
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_scan_op(a: jax.Array, x: jax.Array, h0: jax.Array, *,
+                  chunk: int = 256, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _is_tpu()
+    B, S, R = a.shape
+    pad_r = (-R) % 128
+    chunk = min(chunk, S)
+    pad_s = (-S) % chunk
+    if pad_r or pad_s:
+        pad3 = ((0, 0), (0, pad_s), (0, pad_r))
+        a = jnp.pad(a, pad3)
+        x = jnp.pad(x, pad3)
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_r)))
+    out = rglru_scan_kernel(a, x, h0, chunk=chunk, interpret=interpret)
+    return out[:, :S, :R]

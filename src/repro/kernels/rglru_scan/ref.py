@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel (sequential reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, x: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + x_t. a, x: (B, S, R); h0: (B, R) -> (B, S, R)."""
+
+    def step(h, inp):
+        a_t, x_t = inp
+        h = a_t * h + x_t
+        return h, h
+
+    a32 = a.astype(jnp.float32).swapaxes(0, 1)
+    x32 = x.astype(jnp.float32).swapaxes(0, 1)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (a32, x32))
+    return hs.swapaxes(0, 1)

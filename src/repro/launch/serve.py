@@ -1,0 +1,70 @@
+"""Serving driver: domain adaptation (emulate -> train runtime) + serve.
+
+  PYTHONPATH=src python -m repro.launch.serve --domain automotive \
+      --queries 120 --budget 5 --max-latency 4 --max-cost 0.01
+
+Runs the full ECO-LLM lifecycle: build domain corpus, explore paths with SBA,
+CCA + DSQE training, then serve the held-out queries through the elastic
+fleet and report accuracy / latency / cost / SLO attainment.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.cca import critical_component_analysis
+from repro.core.domains import build_domain, train_test_split
+from repro.core.dsqe import train_dsqe
+from repro.core.emulator import Emulator
+from repro.core.paths import PathSpace
+from repro.core.rps import RuntimePathSelector
+from repro.core.slo import SLO
+from repro.runtime.server import EcoLLMServer, Request
+
+
+def build_server(domain_name: str, *, n_queries: int = 120, budget: float = 5.0,
+                 lam: int = 0, seed: int = 0, n_replicas: int = 2):
+    dom = build_domain(domain_name, n_queries=n_queries, seed=seed)
+    space = PathSpace()
+    train_idx, test_idx = train_test_split(dom, 0.3)
+    emu = Emulator(dom, space, seed=seed)
+    table = emu.explore(train_idx, budget=budget, lam=lam)
+    cca = critical_component_analysis(table, lam=lam)
+    emb_train = dom.query_embeddings[train_idx]
+    dsqe = train_dsqe(emb_train, cca.set_ids, len(cca.set_vocab), seed=seed)
+    rps = RuntimePathSelector(space, dsqe, cca, table, emb_train, lam=lam)
+    server = EcoLLMServer(dom, rps, emu.exec, n_replicas=n_replicas, seed=seed)
+    return server, test_idx
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--domain", default="automotive")
+    ap.add_argument("--queries", type=int, default=120)
+    ap.add_argument("--budget", type=float, default=5.0)
+    ap.add_argument("--latency-first", action="store_true")
+    ap.add_argument("--max-latency", type=float, default=float("inf"))
+    ap.add_argument("--max-cost", type=float, default=float("inf"))
+    args = ap.parse_args()
+
+    server, test_idx = build_server(args.domain, n_queries=args.queries,
+                                    budget=args.budget, lam=int(args.latency_first))
+    slo = SLO(max_latency_s=args.max_latency, max_cost_usd=args.max_cost)
+    accs, lats, costs, ovh = [], [], [], []
+    for qid in test_idx:
+        resp = server.handle(Request(prompt="", qid=qid, slo=slo))
+        accs.append(resp.accuracy)
+        lats.append(resp.latency_s)
+        costs.append(resp.cost_usd)
+        ovh.append(resp.selection_overhead_s)
+    print(f"{args.domain}: served {len(test_idx)} queries")
+    print(f"  accuracy      {np.mean(accs)*100:.1f}%")
+    print(f"  TTFT          {np.mean(lats):.2f}s (p95 {np.percentile(lats, 95):.2f}s)")
+    print(f"  cost          ${np.mean(costs)*1000:.2f} /1k queries")
+    print(f"  selection     {np.mean(ovh)*1e3:.1f} ms")
+    print(f"  system state  {server.system_state()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Step builders: train_step / prefill_step / decode_step per (arch, mesh).
+
+Each builder returns a ``StepBundle``: the pure function, its example-input
+ShapeDtypeStructs, and matching in/out shardings — everything jit/lower needs.
+Used by the multi-pod dry-run, the trainer, and the serving runtime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfglib
+from repro.distributed.api import activation_policy
+from repro.distributed.sharding import ShardingPolicy
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.optim import Optimizer, pick_optimizer, warmup_cosine
+
+Pytree = Any
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args_sds: tuple  # ShapeDtypeStructs to .lower() with
+    in_shardings: tuple
+    out_shardings: Any
+    static_meta: dict
+    donate_argnums: tuple = ()
+
+    def jit(self, **kw):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums, **kw)
+
+    def lower(self, **kw):
+        return self.jit(**kw).lower(*self.args_sds)
+
+
+def params_sds(cfg: ModelConfig) -> Pytree:
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.key(0))
+
+
+def default_optimizer(cfg: ModelConfig) -> Optimizer:
+    n = cfg.param_count()
+    return pick_optimizer(n, warmup_cosine(3e-4, 2000, 100_000))
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def default_microbatches(cfg: ModelConfig, shape: Optional[ShapeSpec]) -> int:
+    """Gradient-accumulation depth: activations of >=100B-param models don't
+    fit per-device at global batch; 4 microbatches trades a 4x-longer step
+    pipeline for a 4x activation-memory cut (grads accumulate in fp32,
+    sharded exactly like the params -> ZeRO-compatible)."""
+    if shape is None or shape.kind != "train":
+        return 1
+    return 4 if cfg.param_count() > 100_000_000_000 else 1
+
+
+def build_train_step(cfg: ModelConfig, policy: ShardingPolicy,
+                     optimizer: Optional[Optimizer] = None,
+                     shape: Optional[ShapeSpec] = None,
+                     microbatches: Optional[int] = None) -> StepBundle:
+    optimizer = optimizer or default_optimizer(cfg)
+    act_policy = policy.activation_policy()
+    if microbatches is None:
+        microbatches = default_microbatches(cfg, shape)
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(lm.train_loss, has_aux=True)(params, cfg, batch)
+
+    def train_step(params, opt_state, step, batch):
+        with activation_policy(act_policy):
+            if microbatches > 1:
+                mb = jax.tree.map(
+                    lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+                    batch,
+                )
+
+                def acc_body(gacc, mbatch):
+                    (loss, metrics), grads = grad_fn(params, mbatch)
+                    gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                    return gacc, dict(metrics, loss=loss)
+
+                gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                gsum, ms = jax.lax.scan(acc_body, gacc0, mb)
+                grads = jax.tree.map(lambda g: g / microbatches, gsum)
+                metrics = jax.tree.map(lambda m: m.mean(), ms)
+            else:
+                (loss, metrics), grads = grad_fn(params, batch)
+                metrics = dict(metrics, loss=loss)
+            new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        return new_params, new_opt, step + 1, metrics
+
+    p_sds = params_sds(cfg)
+    o_sds = jax.eval_shape(optimizer.init, p_sds)
+    step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    p_spec = policy.param_pspecs(cfg, p_sds)
+    o_spec = policy.opt_pspecs(optimizer.name, p_spec, p_sds)
+    p_sh = policy.shardings_of(p_spec)
+    o_sh = policy.shardings_of(o_spec)
+    rep = policy.replicated()
+
+    if shape is None:
+        shape = cfglib.SHAPE_SUITE["train_4k"]
+    batch_sds = cfglib.input_specs(cfg, shape)["batch"]
+    batch_sh = jax.tree.map(policy.data_sharding, batch_sds)
+
+    metrics_sh = {"nll": rep, "z_loss": rep, "aux_loss": rep, "loss": rep}
+    return StepBundle(
+        name=f"train:{cfg.name}",
+        fn=train_step,
+        args_sds=(p_sds, o_sds, step_sds, batch_sds),
+        in_shardings=(p_sh, o_sh, rep, batch_sh),
+        out_shardings=(p_sh, o_sh, rep, metrics_sh),
+        static_meta={"optimizer": optimizer.name, "shape": shape.name},
+        donate_argnums=(0, 1),  # params + opt state update in place
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, policy: ShardingPolicy, shape: ShapeSpec) -> StepBundle:
+    act_policy = policy.activation_policy()
+    specs = cfglib.input_specs(cfg, shape)
+    capacity = shape.seq_len
+
+    if cfg.num_encoder_layers:
+        def prefill_step(params, tokens, frontend):
+            with activation_policy(act_policy):
+                enc = lm.encode(params, cfg, frontend)
+                logits, cache = lm.prefill(params, cfg, tokens, capacity=capacity, encoder_out=enc)
+            return logits, cache, enc
+
+        args = (params_sds(cfg), specs["tokens"], specs["frontend"])
+    elif cfg.frontend:
+        def prefill_step(params, tokens, frontend):
+            with activation_policy(act_policy):
+                logits, cache = lm.prefill(params, cfg, tokens, frontend=frontend, capacity=capacity)
+            return logits, cache
+
+        args = (params_sds(cfg), specs["tokens"], specs["frontend"])
+    else:
+        def prefill_step(params, tokens):
+            with activation_policy(act_policy):
+                logits, cache = lm.prefill(params, cfg, tokens, capacity=capacity)
+            return logits, cache
+
+        args = (params_sds(cfg), specs["tokens"])
+
+    p_sds = args[0]
+    p_sh = policy.shardings_of(policy.param_pspecs(cfg, p_sds))
+    in_sh = (p_sh,) + tuple(policy.data_sharding(a) for a in args[1:])
+    return StepBundle(
+        name=f"prefill:{cfg.name}",
+        fn=prefill_step,
+        args_sds=args,
+        in_shardings=in_sh,
+        out_shardings=None,  # infer: logits data-sharded, cache per policy
+        static_meta={"shape": shape.name, "capacity": capacity},
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve: decode
+# ---------------------------------------------------------------------------
+
+def build_decode_step(cfg: ModelConfig, policy: ShardingPolicy, shape: ShapeSpec) -> StepBundle:
+    act_policy = policy.activation_policy()
+    specs = cfglib.input_specs(cfg, shape)
+    capacity = shape.seq_len
+
+    p_sds = params_sds(cfg)
+    p_sh = policy.shardings_of(policy.param_pspecs(cfg, p_sds))
+    cache_sds = specs["cache"]
+    cache_sh = policy.shardings_of(policy.cache_pspecs(cache_sds))
+    rep = policy.replicated()
+    logits_sh = NamedSharding(policy.mesh, policy.data_pspec((shape.global_batch, cfg.vocab_size)))
+
+    if cfg.num_encoder_layers:
+        def decode_step(params, token, cache, cache_len, encoder_out):
+            with activation_policy(act_policy):
+                return lm.decode_step(params, cfg, token, cache, cache_len,
+                                      capacity=capacity, encoder_out=encoder_out)
+
+        args = (p_sds, specs["token"], cache_sds, specs["cache_len"], specs["encoder_out"])
+        in_sh = (p_sh, policy.data_sharding(specs["token"]), cache_sh, rep,
+                 policy.data_sharding(specs["encoder_out"]))
+    else:
+        def decode_step(params, token, cache, cache_len):
+            with activation_policy(act_policy):
+                return lm.decode_step(params, cfg, token, cache, cache_len, capacity=capacity)
+
+        args = (p_sds, specs["token"], cache_sds, specs["cache_len"])
+        in_sh = (p_sh, policy.data_sharding(specs["token"]), cache_sh, rep)
+
+    return StepBundle(
+        name=f"decode:{cfg.name}",
+        fn=decode_step,
+        args_sds=args,
+        in_shardings=in_sh,
+        out_shardings=(logits_sh, cache_sh),
+        static_meta={"shape": shape.name, "capacity": capacity},
+        donate_argnums=(2,),  # cache updates in place
+    )
+
+
+def build_step(cfg: ModelConfig, policy: ShardingPolicy, shape: ShapeSpec) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, policy, shape=shape)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, policy, shape)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, policy, shape)
+    raise ValueError(shape.kind)

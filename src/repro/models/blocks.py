@@ -1,0 +1,752 @@
+"""Transformer / recurrent / MoE blocks.
+
+Every block implements:
+    init_<type>_block(key, cfg) -> params
+    apply_<type>_block(params, x, ctx) -> (y, new_cache, aux)
+
+where ``ctx`` is a `BlockCtx` describing the execution mode:
+  * train/prefill: full sequence, positions [0..S)
+  * decode: single-token step against a fixed-capacity cache
+
+Caches are plain pytrees so they stack cleanly under `lax.scan` over layers.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class BlockCtx:
+    mode: str  # "train" | "prefill" | "decode"
+    positions: jax.Array  # (B, S) absolute positions of the current tokens
+    cache_len: Optional[jax.Array] = None  # scalar: valid cache entries *after* this step
+    capacity: int = 0  # static cache capacity (decode mode)
+
+    @property
+    def decoding(self) -> bool:
+        return self.mode == "decode"
+
+
+# ===========================================================================
+# Attention block (dense FFN or MoE FFN)
+# ===========================================================================
+
+def init_attn_block(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ka, kf, kx = jax.random.split(key, 3)
+    dt = cfg.activation_dtype
+    p: Params = {
+        "ln1": L.init_rmsnorm(cfg.d_model, dt),
+        "ln2": L.init_rmsnorm(cfg.d_model, dt),
+        "attn": L.init_attention(ka, cfg),
+    }
+    if cross:
+        p["ln_x"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["xattn"] = L.init_attention(kx, cfg)
+    if cfg.num_experts:
+        p["moe"] = init_moe(kf, cfg)
+    elif cfg.d_ff:
+        p["mlp"] = L.init_mlp(kf, cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    return p
+
+
+def attn_cache_capacity(cfg: ModelConfig, capacity: int) -> int:
+    """Local/chunked attention only ever needs a window-sized ring buffer."""
+    if cfg.attention_type in ("local", "chunked") and cfg.window_size:
+        return min(capacity, cfg.window_size)
+    return capacity
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, capacity: int) -> Params:
+    cap = attn_cache_capacity(cfg, capacity)
+    return L.init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim, cfg.activation_dtype)
+
+
+def _self_attention(params: Params, x: jax.Array, ctx: BlockCtx, cfg: ModelConfig, cache: Optional[Params]):
+    q, k, v = L.attention_qkv(params, x, ctx.positions, cfg)
+    window = cfg.window_size if cfg.attention_type == "local" else 0
+    chunk_attn = cfg.window_size if cfg.attention_type == "chunked" else 0
+    ring = cfg.attention_type in ("local", "chunked") and bool(cfg.window_size)
+    new_cache = None
+    if ctx.decoding:
+        assert cache is not None
+        W = cache["k"].shape[1]
+        write_pos = jnp.mod(ctx.cache_len - 1, W) if ring else ctx.cache_len - 1
+        cache = L.kv_cache_update(cache, k, v, write_pos)
+        out = L.decode_attention_xla(
+            q, cache["k"], cache["v"], ctx.cache_len, ring=ring, chunk_attn=chunk_attn
+        )
+        new_cache = cache
+    else:
+        out = L.flash_attention_xla(
+            q, k, v, causal=True, window=window, chunk_attn=chunk_attn, softcap=cfg.logit_softcap
+        )
+        if ctx.mode == "prefill":
+            S = x.shape[1]
+            cap = attn_cache_capacity(cfg, ctx.capacity or S)
+            new_cache = L.init_kv_cache(x.shape[0], cap, cfg.num_kv_heads, cfg.head_dim, cfg.activation_dtype)
+            if cap < S:
+                # ring buffer: last `cap` positions land at slots pos % cap
+                slots = jnp.mod(jnp.arange(S - cap, S), cap)
+                new_cache = {
+                    "k": new_cache["k"].at[:, slots].set(k[:, -cap:].astype(new_cache["k"].dtype)),
+                    "v": new_cache["v"].at[:, slots].set(v[:, -cap:].astype(new_cache["v"].dtype)),
+                }
+            else:
+                new_cache = L.kv_cache_update(new_cache, k, v, 0)
+    return L.attention_out(params, out), new_cache
+
+
+def apply_attn_block(params: Params, x: jax.Array, ctx: BlockCtx, cfg: ModelConfig,
+                     cache: Optional[Params] = None, encoder_out: Optional[jax.Array] = None):
+    h, new_cache = _self_attention(params["attn"], L.rms_norm(x, params["ln1"], cfg.norm_eps), ctx, cfg, cache)
+    x = x + h
+    if "xattn" in params:
+        assert encoder_out is not None
+        h = _cross_attention(params["xattn"], L.rms_norm(x, params["ln_x"], cfg.norm_eps), encoder_out, cfg)
+        x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    y = L.rms_norm(x, params["ln2"], cfg.norm_eps)
+    if "moe" in params:
+        h, aux = moe_apply(params["moe"], y, cfg)
+    elif "mlp" in params:
+        h = L.mlp_apply(params["mlp"], y, cfg.activation)
+    else:
+        h = jnp.zeros_like(x)
+    return x + h, new_cache, aux
+
+
+def _cross_attention(params: Params, x: jax.Array, enc: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full (non-causal) attention from decoder states to encoder output."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, params["wv"])
+    out = L.flash_attention_xla(q, k, v, causal=False)
+    return L.attention_out(params, out)
+
+
+def init_bidir_attn_block(key, cfg: ModelConfig) -> Params:
+    """Encoder block: bidirectional self-attention + FFN."""
+    return init_attn_block(key, cfg)
+
+
+def apply_bidir_attn_block(params: Params, x: jax.Array, ctx: BlockCtx, cfg: ModelConfig):
+    q, k, v = L.attention_qkv(params["attn"], L.rms_norm(x, params["ln1"], cfg.norm_eps), ctx.positions, cfg)
+    out = L.flash_attention_xla(q, k, v, causal=False)
+    x = x + L.attention_out(params["attn"], out)
+    h = L.mlp_apply(params["mlp"], L.rms_norm(x, params["ln2"], cfg.norm_eps), cfg.activation)
+    return x + h, None, jnp.zeros((), jnp.float32)
+
+
+# ===========================================================================
+# Mixture-of-Experts FFN
+# ===========================================================================
+
+def moe_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    ideal = tokens_per_group * cfg.experts_per_token / cfg.num_experts
+    cap = int(math.ceil(ideal * cfg.capacity_factor / 8.0)) * 8
+    return max(cap, 8)
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    dt = cfg.activation_dtype
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    p: Params = {
+        "router": L.dense_init(kr, D, (E,), jnp.float32),
+        "w_gate": (jax.random.normal(kg, (E, D, F), jnp.float32) / math.sqrt(D)).astype(dt),
+        "w_up": (jax.random.normal(ku, (E, D, F), jnp.float32) / math.sqrt(D)).astype(dt),
+        "w_down": (jax.random.normal(kd, (E, F, D), jnp.float32) / math.sqrt(F)).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_mlp(ks, D, F * cfg.num_shared_experts, cfg.activation, dt)
+    return p
+
+
+def moe_group_compute(
+    xg: jax.Array,  # (T, D) one dispatch group of tokens
+    probs: jax.Array,  # (T, E) fp32 router probabilities
+    w_gate: jax.Array,  # (E_loc, D, F)
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    capacity: int,
+    top_k: int,
+    activation: str,
+    expert_offset: int = 0,
+) -> jax.Array:
+    """Capacity-based token dispatch -> per-expert matmul -> weighted combine.
+
+    Supports expert-parallel execution: ``w_*`` may hold only a local slice of
+    experts starting at ``expert_offset``; the returned (T, D) output then
+    contains only those experts' contributions (caller psums across shards).
+    Tokens above an expert's capacity are dropped (standard capacity-factor
+    MoE semantics).
+    """
+    T, D = xg.shape
+    E_loc = w_gate.shape[0]
+    E = probs.shape[-1]
+    C = capacity
+
+    top_p, top_e = jax.lax.top_k(probs, top_k)  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)  # (T*k,) global expert ids
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+
+    order = jnp.argsort(flat_e)  # stable -> preserves token order per expert
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+
+    counts = jnp.bincount(flat_e, length=E)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(T * top_k, dtype=jnp.int32) - starts[se]
+
+    local_e = se - expert_offset
+    valid = (slot < C) & (local_e >= 0) & (local_e < E_loc)
+    scatter_pos = jnp.where(valid, local_e * C + slot, E_loc * C)  # sentinel -> dropped
+
+    gather_idx = jnp.full((E_loc * C + 1,), T, jnp.int32).at[scatter_pos].set(st, mode="drop")
+    combine_w = jnp.zeros((E_loc * C + 1,), jnp.float32).at[scatter_pos].set(sp, mode="drop")
+    gather_idx = gather_idx[:-1]
+    combine_w = combine_w[:-1]
+
+    x_pad = jnp.concatenate([xg, jnp.zeros((1, D), xg.dtype)], axis=0)
+    x_disp = x_pad[gather_idx].reshape(E_loc, C, D)
+
+    act = L._ACTS[activation]
+    g = act(jnp.einsum("ecd,edf->ecf", x_disp, w_gate))
+    u = jnp.einsum("ecd,edf->ecf", x_disp, w_up)
+    h = jnp.einsum("ecf,efd->ecd", g * u, w_down)  # (E_loc, C, D)
+
+    h_flat = h.reshape(E_loc * C, D) * combine_w[:, None].astype(h.dtype)
+    out = jnp.zeros((T + 1, D), h.dtype).at[gather_idx].add(h_flat)
+    return out[:T]
+
+
+def moe_dispatch_indices(probs: jax.Array, *, top_k: int, capacity: int):
+    """Per-group dispatch plan.  probs: (T, E) ->
+      gather_idx  (E, C)  token id feeding each expert slot (sentinel T = empty)
+      combine_w   (E, C)  router weight of that slot
+      slot_table  (T, k)  inverse map: slot id of each assignment (sentinel E*C
+                          = dropped by capacity)
+    Pure integer math — cheap and local under batch sharding (vmapped over
+    dispatch groups).  The inverse map is what lets dispatch AND combine both
+    be gathers (scatter-free MoE permutation; XLA partitions batched gathers
+    but replicates batched scatters)."""
+    T, E = probs.shape
+    C = capacity
+    top_p, top_e = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    flat_e = top_e.reshape(-1)
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(T * top_k, dtype=jnp.int32) - starts[se]
+    valid = slot < C
+    scatter_pos = jnp.where(valid, se * C + slot, E * C)
+    gather_idx = jnp.full((E * C + 1,), T, jnp.int32).at[scatter_pos].set(st, mode="drop")[:-1]
+    combine_w = jnp.zeros((E * C + 1,), jnp.float32).at[scatter_pos].set(sp, mode="drop")[:-1]
+    inv = jnp.argsort(order)  # flat assignment i -> sorted position
+    slot_table = scatter_pos[inv].reshape(T, top_k)
+    return gather_idx.reshape(E, C), combine_w.reshape(E, C), slot_table
+
+
+def _batched_take(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """src (G, N, D), idx (G, M) -> (G, M, D).  Indices are in-bounds by
+    construction (sentinels point at the zero pad row), so no select mask."""
+    return jnp.take_along_axis(src, idx[..., None], axis=1, mode="promise_in_bounds")
+
+
+def _pad_row(x: jax.Array) -> jax.Array:
+    return jnp.concatenate([x, jnp.zeros((x.shape[0], 1, x.shape[2]), x.dtype)], axis=1)
+
+
+def _gather_sum_k(src_pad: jax.Array, slot_table: jax.Array) -> jax.Array:
+    """out[g, t] = sum_j src_pad[g, slot_table[g, t, j]].
+
+    Static loop over the small top-k dim: peak transient is ONE (G, T, D)
+    gather instead of the (G, T*k, D) expansion (8x memory at top-8)."""
+    G, T, k = slot_table.shape
+    out = _batched_take(src_pad, slot_table[:, :, 0])
+    for j in range(1, k):
+        out = out + _batched_take(src_pad, slot_table[:, :, j])
+    return out
+
+
+@jax.custom_vjp
+def moe_permute(x: jax.Array, gather_idx: jax.Array, slot_table: jax.Array) -> jax.Array:
+    """Dispatch tokens to expert slots.  x (G,T,D), gather_idx (G,EC) ->
+    (G,EC,D).  Backward is a gather over the inverse map (no scatter)."""
+    return _batched_take(_pad_row(x), gather_idx)
+
+
+def _moe_permute_fwd(x, gather_idx, slot_table):
+    return moe_permute(x, gather_idx, slot_table), (gather_idx, slot_table)
+
+
+def _moe_permute_bwd(res, g):
+    _, slot_table = res
+    dx = _gather_sum_k(_pad_row(g), slot_table)  # sentinel slot EC -> zero row
+    return dx, None, None
+
+
+moe_permute.defvjp(_moe_permute_fwd, _moe_permute_bwd)
+
+
+@jax.custom_vjp
+def moe_unpermute(hw: jax.Array, gather_idx: jax.Array, slot_table: jax.Array) -> jax.Array:
+    """Combine expert-slot outputs back per token.  hw (G,EC,D) ->
+    (G,T,D).  Forward AND backward are gathers."""
+    return _gather_sum_k(_pad_row(hw), slot_table)
+
+
+def _moe_unpermute_fwd(hw, gather_idx, slot_table):
+    return moe_unpermute(hw, gather_idx, slot_table), (gather_idx, slot_table)
+
+
+def _moe_unpermute_bwd(res, g):
+    gather_idx, _ = res
+    dhw = _batched_take(_pad_row(g), gather_idx)  # sentinel token T -> zero row
+    return dhw, None, None
+
+
+moe_unpermute.defvjp(_moe_unpermute_fwd, _moe_unpermute_bwd)
+
+
+def moe_expert_ffn(x_disp: jax.Array, params: Params, activation: str) -> jax.Array:
+    """Batched per-expert GLU FFN. x_disp: (B, E, C, D) -> (B, E, C, D)."""
+    act = L._ACTS[activation]
+    g = act(jnp.einsum("becd,edf->becf", x_disp, params["w_gate"]))
+    u = jnp.einsum("becd,edf->becf", x_disp, params["w_up"])
+    h = constrain(g * u, "moe_hidden")
+    return jnp.einsum("becf,efd->becd", h, params["w_down"])
+
+
+def moe_apply(params: Params, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Capacity-based MoE with batched dispatch.
+
+    Dispatch groups = batch rows when S > 1 (the gather then has matching
+    batch sharding on operand and indices -> stays local under DP), or the
+    whole batch at decode (S == 1).  Expert compute is a single batched
+    einsum so the expert dimension shards cleanly over the model axis.
+    """
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Switch-style load-balance auxiliary loss, computed globally.
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * mean_prob) * cfg.router_aux_coef
+
+    decode = S == 1
+    if decode:
+        xg = x.reshape(1, B, D)
+        pg = probs.reshape(1, B, E)
+    else:
+        xg, pg = x, probs
+    G, T = xg.shape[0], xg.shape[1]
+    cap = moe_capacity(T, cfg)
+
+    idx, cw, slots = jax.vmap(lambda p: moe_dispatch_indices(p, top_k=k, capacity=cap))(pg)
+    idx = constrain(idx, "moe_idx").reshape(G, E * cap)  # (G, E*C)
+    x_disp = moe_permute(xg, idx, slots)
+    x_disp = constrain(x_disp.reshape(G, E, cap, D), "moe_dispatch")
+    h = moe_expert_ffn(x_disp, params, cfg.activation)  # (G, E, C, D)
+    h = constrain(h, "moe_dispatch")
+    hw = h.reshape(G, E * cap, D) * cw.reshape(G, E * cap, 1).astype(h.dtype)
+    out = moe_unpermute(hw, idx, slots).reshape(B, S, D)
+
+    if "shared" in params:
+        out = out + L.mlp_apply(params["shared"], x, cfg.activation)
+    return constrain(out, "act_btd"), aux
+
+
+# ===========================================================================
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ===========================================================================
+
+def init_rglru_block(key, cfg: ModelConfig) -> Params:
+    kx, kg, ko, ka, ki, kc, kf = jax.random.split(key, 7)
+    dt = cfg.activation_dtype
+    D, R = cfg.d_model, cfg.rnn_state_dim
+    # Lambda init so that a = sigmoid(lam)^(c*r) sits in [0.9, 0.999]
+    u = jax.random.uniform(kc, (R,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(u ** (1.0 / 8.0) / (1 - u ** (1.0 / 8.0)))
+    p: Params = {
+        "ln1": L.init_rmsnorm(D, dt),
+        "ln2": L.init_rmsnorm(D, dt),
+        "w_x": L.dense_init(kx, D, (R,), dt),
+        "w_gate_in": L.dense_init(kg, D, (R,), dt),
+        "w_out": L.dense_init(ko, R, (D,), dt),
+        "conv_w": (jax.random.normal(kf, (cfg.conv1d_width, R), jnp.float32) * 0.02).astype(dt),
+        "conv_b": jnp.zeros((R,), dt),
+        "w_a": L.dense_init(ka, R, (R,), jnp.float32),
+        "b_a": jnp.zeros((R,), jnp.float32),
+        "w_i": L.dense_init(ki, R, (R,), jnp.float32),
+        "b_i": jnp.zeros((R,), jnp.float32),
+        "lam": lam,
+    }
+    if cfg.d_ff:
+        p["mlp"] = L.init_mlp(kf, D, cfg.d_ff, cfg.activation, dt)
+    return p
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> Params:
+    R = cfg.rnn_state_dim
+    return {
+        "h": jnp.zeros((batch, R), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, R), cfg.activation_dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, history: Optional[jax.Array]):
+    """Depthwise causal conv. x:(B,S,R), w:(W,R). Returns (y, new_history)."""
+    W = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)  # (B, S+W-1, R)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_hist = xp[:, -(W - 1):] if W > 1 else history
+    return y, new_hist
+
+
+def rglru_scan(y: jax.Array, a_log: jax.Array, gated_in: jax.Array, h0: Optional[jax.Array]):
+    """Diagonal linear recurrence h_t = a_t*h_{t-1} + x_t via associative scan.
+
+    a_log: (B,S,R) log of decay in (-inf, 0]; gated_in: (B,S,R).
+    """
+    a = jnp.exp(a_log)
+    x_in = gated_in
+    if h0 is not None:
+        # fold initial state into the first step
+        x_in = x_in.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    return h
+
+
+def _rglru_gates(params: Params, y: jax.Array):
+    """Returns (log_a, scaled_input) for the recurrence, fp32."""
+    y32 = y.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...r,rs->...s", y32, params["w_a"]) + params["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...r,rs->...s", y32, params["w_i"]) + params["b_i"])
+    c = 8.0
+    log_a = -c * r * jax.nn.softplus(params["lam"])  # (..., R), <= 0
+    a_sq = jnp.exp(2.0 * log_a)
+    scaled = jnp.sqrt(jnp.maximum(1.0 - a_sq, 1e-8)) * (i * y32)
+    return log_a, scaled
+
+
+def apply_rglru_block(params: Params, x: jax.Array, ctx: BlockCtx, cfg: ModelConfig,
+                      cache: Optional[Params] = None, **_):
+    xin = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", xin, params["w_gate_in"]))
+    y = jnp.einsum("bsd,dr->bsr", xin, params["w_x"])
+    y = constrain(y, "act_btr")
+
+    hist = cache["conv"] if ctx.decoding else None
+    y, new_hist = _causal_conv1d(y, params["conv_w"], params["conv_b"], hist)
+
+    log_a, scaled = _rglru_gates(params, y)
+    new_cache = None
+    if ctx.decoding:
+        h_prev = cache["h"]
+        h = jnp.exp(log_a[:, 0]) * h_prev + scaled[:, 0]
+        new_cache = {"h": h, "conv": new_hist}
+        h_seq = h[:, None]
+    else:
+        h_seq = rglru_scan(y, log_a, scaled, None)
+        if ctx.mode == "prefill":
+            new_cache = {"h": h_seq[:, -1], "conv": new_hist.astype(cfg.activation_dtype)}
+    out = (gate.astype(jnp.float32) * h_seq).astype(x.dtype)
+    x = x + jnp.einsum("bsr,rd->bsd", out, params["w_out"])
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in params:
+        x = x + L.mlp_apply(params["mlp"], L.rms_norm(x, params["ln2"], cfg.norm_eps), cfg.activation)
+    return x, new_cache, aux
+
+
+# ===========================================================================
+# mLSTM block (xLSTM) — chunkwise-parallel matrix-memory LSTM
+# ===========================================================================
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    inner = 2 * cfg.d_model  # up-projection factor 2 (xLSTM paper)
+    return inner, inner // cfg.num_heads
+
+
+def init_mlstm_block(key, cfg: ModelConfig) -> Params:
+    ku, kq, kk, kv, ki, kf, ko, kg = jax.random.split(key, 8)
+    dt = cfg.activation_dtype
+    D = cfg.d_model
+    inner, dh = _mlstm_dims(cfg)
+    return {
+        "ln1": L.init_rmsnorm(D, dt),
+        "w_up": L.dense_init(ku, D, (inner,), dt),
+        "w_gate": L.dense_init(kg, D, (inner,), dt),
+        "wq": L.dense_init(kq, inner, (inner,), dt),
+        "wk": L.dense_init(kk, inner, (inner,), dt),
+        "wv": L.dense_init(kv, inner, (inner,), dt),
+        "w_i": L.dense_init(ki, inner, (cfg.num_heads,), jnp.float32),
+        "b_i": jnp.zeros((cfg.num_heads,), jnp.float32),
+        "w_f": L.dense_init(kf, inner, (cfg.num_heads,), jnp.float32),
+        "b_f": jnp.ones((cfg.num_heads,), jnp.float32) * 3.0,
+        "out_norm": L.init_rmsnorm(inner, dt),
+        "w_down": L.dense_init(ko, inner, (D,), dt),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    NH = cfg.num_heads
+    _, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, NH, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, NH, dh), jnp.float32),
+        "m": jnp.full((batch, NH), -1e30, jnp.float32),
+    }
+
+
+def mlstm_chunkwise(q, k, v, li, lf, state, chunk: int = 256):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,NH,DH); li/lf: (B,S,NH) log input / log forget gate.
+    state: {"C","n","m"} carried across chunks.  Returns (h, new_state).
+    """
+    B, S, NH, DH = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    scale = 1.0 / math.sqrt(DH)
+
+    qr = q.reshape(B, n_chunks, chunk, NH, DH).transpose(1, 0, 3, 2, 4)  # (N,B,NH,L,DH)
+    kr = k.reshape(B, n_chunks, chunk, NH, DH).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, n_chunks, chunk, NH, DH).transpose(1, 0, 3, 2, 4)
+    lir = li.reshape(B, n_chunks, chunk, NH).transpose(1, 0, 3, 2)  # (N,B,NH,L)
+    lfr = lf.reshape(B, n_chunks, chunk, NH).transpose(1, 0, 3, 2)
+
+    # checkpoint: keep the per-chunk (L, L) decay/score blocks out of the
+    # saved-residual set (recomputed during backward), mirroring flash attn.
+    @partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, lic, lfc = inp  # (B,NH,L,*)
+        b = jnp.cumsum(lfc, axis=-1)  # inclusive logcumsum of forget gates
+        # per-position stabilizer
+        intra_max = jax.lax.cummax(lic - b, axis=lic.ndim - 1)
+        m_t = jnp.maximum(m[..., None] + b, b + intra_max)  # (B,NH,L)
+        # inter-chunk: read from running memory
+        inter_coef = jnp.exp(m[..., None] + b - m_t)  # (B,NH,L)
+        h_inter = jnp.einsum("bhld,bhde->bhle", qc, C) * scale
+        n_inter = jnp.einsum("bhld,bhd->bhl", qc, n) * scale
+        # intra-chunk decay matrix  Dmat[t,s] = exp(b_t - b_s + li_s - m_t), s<=t
+        logD = b[..., :, None] - b[..., None, :] + lic[..., None, :] - m_t[..., None]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dmat = jnp.where(mask, jnp.exp(logD), 0.0)
+        scores = jnp.einsum("bhld,bhsd->bhls", qc, kc) * scale * Dmat
+        h_intra = jnp.einsum("bhls,bhsd->bhld", scores.astype(vc.dtype), vc)
+        n_intra = jnp.sum(scores, axis=-1)  # (B,NH,L)
+        h_num = h_inter * inter_coef[..., None] + h_intra
+        denom = jnp.maximum(jnp.abs(n_inter * inter_coef + n_intra), jnp.exp(-m_t))
+        h = h_num / denom[..., None]
+        # state update to end of chunk
+        bL = b[..., -1:]  # (B,NH,1)
+        g = bL - b + lic  # (B,NH,L) per-position contribution in log space
+        m_new = jnp.maximum(m + bL[..., 0], jnp.max(g, axis=-1))
+        state_coef = jnp.exp(m + bL[..., 0] - m_new)  # (B,NH)
+        w = jnp.exp(g - m_new[..., None])  # (B,NH,L)
+        C_new = C * state_coef[..., None, None] + jnp.einsum("bhl,bhld,bhle->bhde", w, kc, vc)
+        n_new = n * state_coef[..., None] + jnp.einsum("bhl,bhld->bhd", w, kc)
+        return (C_new, n_new, m_new), h
+
+    init = (state["C"], state["n"], state["m"])
+    (C, n, m), hs = jax.lax.scan(body, init, (qr, kr, vr, lir, lfr))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, NH, DH)
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(q, k, v, li, lf, state):
+    """Single-token recurrent mLSTM step. q/k/v: (B,1,NH,DH)."""
+    B, _, NH, DH = q.shape
+    scale = 1.0 / math.sqrt(DH)
+    qs, ks, vs = q[:, 0], k[:, 0], v[:, 0]  # (B,NH,DH)
+    lis, lfs = li[:, 0], lf[:, 0]  # (B,NH)
+    m_new = jnp.maximum(lfs + state["m"], lis)
+    f_p = jnp.exp(lfs + state["m"] - m_new)
+    i_p = jnp.exp(lis - m_new)
+    C = state["C"] * f_p[..., None, None] + i_p[..., None, None] * (ks[..., :, None] * vs[..., None, :])
+    n = state["n"] * f_p[..., None] + i_p[..., None] * ks
+    h_num = jnp.einsum("bhd,bhde->bhe", qs, C) * scale
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n) * scale), jnp.exp(-m_new))
+    h = (h_num / denom[..., None])[:, None]  # (B,1,NH,DH)
+    return h.reshape(B, 1, NH * DH), {"C": C, "n": n, "m": m_new}
+
+
+def apply_mlstm_block(params: Params, x: jax.Array, ctx: BlockCtx, cfg: ModelConfig,
+                      cache: Optional[Params] = None, **_):
+    B, S, D = x.shape
+    NH = cfg.num_heads
+    inner, dh = _mlstm_dims(cfg)
+    xin = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+    up = jnp.einsum("bsd,di->bsi", xin, params["w_up"])
+    gate = jnp.einsum("bsd,di->bsi", xin, params["w_gate"])
+    q = jnp.einsum("bsi,ij->bsj", up, params["wq"]).reshape(B, S, NH, dh)
+    k = jnp.einsum("bsi,ij->bsj", up, params["wk"]).reshape(B, S, NH, dh)
+    v = jnp.einsum("bsi,ij->bsj", up, params["wv"]).reshape(B, S, NH, dh)
+    up32 = up.astype(jnp.float32)
+    li = jnp.einsum("bsi,ih->bsh", up32, params["w_i"]) + params["b_i"]
+    lf = jax.nn.log_sigmoid(jnp.einsum("bsi,ih->bsh", up32, params["w_f"]) + params["b_f"])
+
+    state = cache if cache is not None else init_mlstm_cache(cfg, B)
+    new_cache = None
+    if ctx.decoding:
+        h, new_cache = mlstm_step(q, k, v, li, lf, state)
+    else:
+        h, end_state = mlstm_chunkwise(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), li, lf, state
+        )
+        h = h.reshape(B, S, inner)
+        if ctx.mode == "prefill":
+            new_cache = end_state
+    h = L.rms_norm(h.astype(x.dtype), params["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(gate)
+    out = jnp.einsum("bsi,id->bsd", h, params["w_down"])
+    return x + out, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ===========================================================================
+# sLSTM block (xLSTM) — scalar-memory LSTM with exponential gating
+# ===========================================================================
+
+def init_slstm_block(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 10)
+    dt = cfg.activation_dtype
+    D = cfg.d_model
+    NH = cfg.num_heads
+    dh = D // NH
+    ff = int(math.ceil(4.0 / 3.0 * D / 8.0)) * 8
+    p: Params = {"ln1": L.init_rmsnorm(D, dt), "ln2": L.init_rmsnorm(D, dt)}
+    for gi, g in enumerate(["z", "i", "f", "o"]):
+        p[f"w_{g}"] = L.dense_init(keys[gi], D, (D,), dt)
+        p[f"r_{g}"] = (jax.random.normal(keys[gi + 4], (NH, dh, dh), jnp.float32) / math.sqrt(dh)).astype(dt)
+        p[f"b_{g}"] = jnp.zeros((D,), jnp.float32) if g != "f" else jnp.ones((D,), jnp.float32) * 3.0
+    p["w_out"] = L.dense_init(keys[8], D, (D,), dt)
+    p["mlp"] = L.init_mlp(keys[9], D, ff, "geglu", dt)
+    return p
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    D = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, D), jnp.float32),
+        "c": jnp.zeros((batch, D), jnp.float32),
+        "n": jnp.ones((batch, D), jnp.float32),
+        "m": jnp.zeros((batch, D), jnp.float32),
+    }
+
+
+def _slstm_cell(params: Params, xt, state, NH: int):
+    """One sLSTM step. xt: dict of per-gate input preactivations (B, D)."""
+    B, D = xt["z"].shape
+    dh = D // NH
+    h_prev = state["h"].reshape(B, NH, dh)
+
+    def rec(g):
+        r = params[f"r_{g}"].astype(jnp.float32)
+        return jnp.einsum("bhd,hde->bhe", h_prev, r).reshape(B, D)
+
+    z = jnp.tanh(xt["z"] + rec("z"))
+    o = jax.nn.sigmoid(xt["o"] + rec("o"))
+    i_tilde = xt["i"] + rec("i")
+    f_tilde = xt["f"] + rec("f")
+    lf = jax.nn.log_sigmoid(f_tilde)
+    m_new = jnp.maximum(lf + state["m"], i_tilde)
+    i_p = jnp.exp(i_tilde - m_new)
+    f_p = jnp.exp(lf + state["m"] - m_new)
+    c = f_p * state["c"] + i_p * z
+    n = f_p * state["n"] + i_p
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def apply_slstm_block(params: Params, x: jax.Array, ctx: BlockCtx, cfg: ModelConfig,
+                      cache: Optional[Params] = None, **_):
+    B, S, D = x.shape
+    NH = cfg.num_heads
+    xin = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+    pre = {
+        g: (jnp.einsum("bsd,de->bse", xin, params[f"w_{g}"]).astype(jnp.float32) + params[f"b_{g}"])
+        for g in ["z", "i", "f", "o"]
+    }
+    state = cache if cache is not None else init_slstm_cache(cfg, B)
+    new_cache = None
+    if ctx.decoding:
+        state = _slstm_cell(params, {g: pre[g][:, 0] for g in pre}, state, NH)
+        h_seq = state["h"][:, None]
+        new_cache = state
+    else:
+        def step(carry, xs):
+            st = _slstm_cell(params, xs, carry, NH)
+            return st, st["h"]
+
+        xs = {g: pre[g].swapaxes(0, 1) for g in pre}  # (S,B,D)
+        end_state, hs = jax.lax.scan(step, state, xs)
+        h_seq = hs.swapaxes(0, 1)  # (B,S,D)
+        if ctx.mode == "prefill":
+            new_cache = end_state
+    x = x + jnp.einsum("bsd,de->bse", h_seq.astype(x.dtype), params["w_out"])
+    x = x + L.mlp_apply(params["mlp"], L.rms_norm(x, params["ln2"], cfg.norm_eps), "geglu")
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ===========================================================================
+# registry
+# ===========================================================================
+
+BLOCK_INITS = {
+    "attn": init_attn_block,
+    "rglru": init_rglru_block,
+    "mlstm": init_mlstm_block,
+    "slstm": init_slstm_block,
+}
+
+BLOCK_APPLIES = {
+    "attn": apply_attn_block,
+    "rglru": apply_rglru_block,
+    "mlstm": apply_mlstm_block,
+    "slstm": apply_slstm_block,
+}
+
+
+def init_block_cache(block_type: str, cfg: ModelConfig, batch: int, capacity: int):
+    if block_type == "attn":
+        return init_attn_cache(cfg, batch, capacity)
+    if block_type == "rglru":
+        return init_rglru_cache(cfg, batch)
+    if block_type == "mlstm":
+        return init_mlstm_cache(cfg, batch)
+    if block_type == "slstm":
+        return init_slstm_cache(cfg, batch)
+    raise ValueError(block_type)

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    adafactor,
+    sgd,
+    pick_optimizer,
+)
+from repro.optim.schedules import warmup_cosine, constant_schedule  # noqa: F401

@@ -1,0 +1,174 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+``Optimizer`` carries two pure functions:
+  * ``init(params) -> state``
+  * ``update(grads, state, params, step) -> (new_params, new_state)``
+
+State layout mirrors the param pytree, so the parameter sharding policy
+applies verbatim to optimizer state (ZeRO-style: moments inherit the param's
+(data, model) sharding and are therefore fully sharded across the mesh).
+
+``adafactor`` keeps factored second moments for >=2D params (rows+cols
+instead of a full moment tensor) — the memory-sane choice for the 1T-param
+Kimi config (full Adam moments would need ~8 TB fp32).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, jax.Array], tuple[Pytree, Pytree]]
+
+
+def _global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        lr_t = lr(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: Schedule, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {
+                    "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(st, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr(step)
+
+        def upd_one(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p):
+                row = beta * s["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * s["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(row, axis=-1, keepdims=True)
+                vhat = (row / jnp.maximum(row_mean, eps))[..., None] * col[..., None, :]
+                new_s = {"row": row, "col": col}
+            else:
+                vhat = beta * s["v"] + (1 - beta) * g2
+                new_s = {"v": vhat}
+            u = g32 / jnp.sqrt(jnp.maximum(vhat, eps))
+            # update clipping (RMS of update <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            delta = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), new_s
+
+        def upd(g, s, p):
+            # Stacked-layer leaves (L, ...) are updated one slice at a time:
+            # factored stats act on the trailing two dims, so lax.map over the
+            # leading dim is exact and caps the fp32 transient at one layer's
+            # slice (matters at 1T params: whole-leaf fp32 copies are ~27 GB
+            # per device even fully sharded).
+            if p.ndim >= 3 and p.size * 4 > (1 << 28):
+                return jax.lax.map(lambda gsp: upd_one(*gsp), (g, s, p))
+            return upd_one(g, s, p)
+
+        flat = jax.tree.map(upd, grads, state, params,
+                            is_leaf=lambda x: isinstance(x, dict) and ("row" in x or "v" in x))
+        is_pair = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda x: x[0], flat, is_leaf=is_pair)
+        new_state = jax.tree.map(lambda x: x[1], flat, is_leaf=is_pair)
+        return new_params, new_state
+
+    return Optimizer("adafactor", init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgd(lr: Schedule, momentum: float = 0.9, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr_t = lr(step)
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        flat = jax.tree.map(upd, grads, state["m"], params)
+        is_pair = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda x: x[0], flat, is_leaf=is_pair),
+                {"m": jax.tree.map(lambda x: x[1], flat, is_leaf=is_pair)})
+
+    return Optimizer("sgd", init, update)
+
+
+def pick_optimizer(param_count: int, lr_schedule: Schedule) -> Optimizer:
+    """Framework default: Adafactor above 20B params (state memory), AdamW
+    otherwise."""
+    if param_count > 20_000_000_000:
+        return adafactor(lr_schedule)
+    return adamw(lr_schedule)

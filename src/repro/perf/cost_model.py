@@ -1,0 +1,186 @@
+"""Analytic per-(arch x shape) FLOP/byte model for the roofline.
+
+Why analytic: XLA's cost_analysis counts while-loop bodies ONCE (verified —
+see EXPERIMENTS.md §Roofline), so scan-over-layers models can't be costed
+from the compiled artifact alone.  This model is exact for matmul-dominated
+work and is cross-validated against compiled HLO on reduced unrolled configs
+(tests/test_roofline.py).
+
+Two compute variants are reported:
+  * impl_flops   — what the XLA blocked implementation executes (causal /
+                   windowed masks cost full blocks: masked-out tiles are
+                   still computed);
+  * kernel_flops — what the Pallas kernels execute on TPU (fully-masked
+                   tiles are skipped -> causal is ~2x cheaper at long S).
+The gap IS the motivation for the kernels; §Perf tracks it per cell.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig, ShapeSpec
+
+BYTES = {"bfloat16": 2, "float32": 4}
+
+
+@dataclass
+class CellCost:
+    impl_flops: float  # global per step
+    kernel_flops: float
+    hbm_bytes: float  # global per step (weights + activations + caches)
+    model_flops: float  # 6*N(_active)*tokens — the "useful" count
+    params_bytes: float
+
+    def per_device(self, n: int) -> "CellCost":
+        return CellCost(self.impl_flops / n, self.kernel_flops / n,
+                        self.hbm_bytes / n, self.model_flops / n,
+                        self.params_bytes / n)
+
+
+def _glu(cfg: ModelConfig, d: int, f: int) -> float:
+    k = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    return 2.0 * k * d * f
+
+
+def _attn_proj(cfg: ModelConfig) -> float:
+    d, hd, H, K = cfg.d_model, cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    return 2.0 * (d * H * hd + 2 * d * K * hd + H * hd * d)
+
+
+def _attn_span(cfg: ModelConfig, S: int, impl: bool) -> float:
+    """Average attended kv length per query token."""
+    if cfg.attention_type == "local" and cfg.window_size:
+        ideal = min(cfg.window_size, S)
+        return float(S if impl else ideal)  # xla impl scans all kv chunks
+    if cfg.attention_type == "chunked" and cfg.window_size:
+        ideal = min(cfg.window_size, S) / 2
+        return float(S if impl else ideal)
+    return float(S if impl else S / 2)  # causal ideal = S/2
+
+
+def _block_flops_per_token(cfg: ModelConfig, lt: str, S: int, impl: bool,
+                           decode: bool) -> float:
+    d = cfg.d_model
+    if lt == "attn":
+        H, hd = cfg.num_heads, cfg.head_dim
+        span = _decode_span(cfg, S) if decode else _attn_span(cfg, S, impl)
+        fl = _attn_proj(cfg) + 2.0 * 2.0 * H * hd * span
+        if cfg.num_experts:
+            E, k = cfg.num_experts, cfg.experts_per_token
+            slots = k * cfg.capacity_factor  # capacity padding included
+            fl += 2.0 * d * E  # router
+            fl += slots * _glu(cfg, d, cfg.moe_d_ff)
+            fl += cfg.num_shared_experts * _glu(cfg, d, cfg.moe_d_ff)
+        elif cfg.d_ff:
+            fl += _glu(cfg, d, cfg.d_ff)
+        if cfg.cross_attention:
+            from repro.configs import ENCDEC_DECODE_SRC_LEN
+
+            fl += _attn_proj(cfg) + 2.0 * 2.0 * cfg.num_heads * cfg.head_dim * ENCDEC_DECODE_SRC_LEN
+        return fl
+    if lt == "rglru":
+        R, W = cfg.rnn_state_dim, cfg.conv1d_width
+        fl = 2.0 * (2 * d * R + R * d + 2 * R * R) + 2.0 * W * R + 10.0 * R
+        if cfg.d_ff:
+            fl += _glu(cfg, d, cfg.d_ff)
+        return fl
+    if lt == "mlstm":
+        inner = 2 * d
+        dh = inner // cfg.num_heads
+        chunk = min(256, S)
+        fl = 2.0 * 2 * d * inner + 3 * 2.0 * inner * inner + 2.0 * inner * d
+        fl += 2.0 * 2.0 * inner * (dh if decode else chunk)  # memory read/intra
+        fl += 4.0 * inner * dh  # state update
+        return fl
+    if lt == "slstm":
+        dh = d // cfg.num_heads
+        ff = int(4 / 3 * d)
+        return 2.0 * 4 * d * d + 2.0 * 4 * d * dh + 2.0 * d * d + _glu(cfg, d, ff)
+    raise KeyError(lt)
+
+
+def _decode_span(cfg: ModelConfig, S: int) -> float:
+    if cfg.attention_type in ("local", "chunked") and cfg.window_size:
+        return float(min(cfg.window_size, S))
+    return float(S)
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeSpec, *, remat: bool = True,
+              sequence_parallel: bool = True) -> CellCost:
+    B, S = shape.global_batch, shape.seq_len
+    P = cfg.param_count()
+    P_active = cfg.active_param_count()
+    pbytes = P * BYTES[cfg.dtype]
+    d = cfg.d_model
+
+    if shape.kind == "decode":
+        tokens = B  # one token per sequence per step
+        fl_impl = fl_kern = 0.0
+        for lt in cfg.layer_types:
+            f = _block_flops_per_token(cfg, lt, S, True, True)
+            fl_impl += f * tokens
+            fl_kern += _block_flops_per_token(cfg, lt, S, False, True) * tokens
+        head = 2.0 * d * cfg.vocab_padded * tokens
+        fl_impl += head
+        fl_kern += head
+        # bytes: weights once (MoE: every expert hit by >=1 of B*k draws in
+        # expectation -> cap with coverage), caches once, activations small
+        import math
+        if cfg.num_experts:
+            cover = 1.0 - math.exp(-B * cfg.experts_per_token / cfg.num_experts)
+            wbytes = (P - (P - P_active)) * BYTES[cfg.dtype] + (P - P_active) * BYTES[cfg.dtype] * cover
+        else:
+            wbytes = pbytes
+        cache = _cache_bytes(cfg, B, S)
+        hbm = wbytes + cache + tokens * d * 40.0
+        model = 2.0 * P_active * tokens
+        return CellCost(fl_impl, fl_kern, hbm, model, pbytes)
+
+    tokens = B * S
+    fl_impl = fl_kern = 0.0
+    for lt in cfg.layer_types:
+        fl_impl += _block_flops_per_token(cfg, lt, S, True, False) * tokens
+        fl_kern += _block_flops_per_token(cfg, lt, S, False, False) * tokens
+    for _ in range(cfg.num_encoder_layers):
+        f = _attn_proj(cfg) + 2.0 * 2.0 * cfg.num_heads * cfg.head_dim * S + _glu(cfg, d, cfg.d_ff)
+        fl_impl += f * tokens
+        fl_kern += f * tokens
+
+    if shape.kind == "train":
+        head = 2.0 * d * cfg.vocab_padded * tokens
+        fl_impl = (fl_impl + head) * (4.0 if remat else 3.0)
+        fl_kern = (fl_kern + head) * (4.0 if remat else 3.0)
+        model = 6.0 * P_active * tokens
+        act_bytes = tokens * d * len(cfg.layer_types) * BYTES[cfg.dtype] * (2.0 if sequence_parallel else 2.0)
+        hbm = pbytes * 6.0 + act_bytes * 3.0  # w fwd/bwd/opt + act save/reread
+        return CellCost(fl_impl, fl_kern, hbm, model, pbytes)
+
+    # prefill
+    head = 2.0 * d * cfg.vocab_padded * B  # last position only
+    fl_impl += head
+    fl_kern += head
+    model = 2.0 * P_active * tokens
+    hbm = pbytes + _cache_bytes(cfg, B, S) + tokens * d * 30.0
+    return CellCost(fl_impl, fl_kern, hbm, model, pbytes)
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    from repro.models.blocks import attn_cache_capacity
+
+    total = 0.0
+    for lt in cfg.layer_types:
+        if lt == "attn":
+            W = attn_cache_capacity(cfg, S)
+            total += 2.0 * B * W * cfg.num_kv_heads * cfg.head_dim * BYTES[cfg.dtype]
+        elif lt == "rglru":
+            total += B * cfg.rnn_state_dim * 4.0
+        elif lt == "mlstm":
+            dh = 2 * cfg.d_model // cfg.num_heads
+            total += B * cfg.num_heads * dh * dh * 4.0
+        elif lt == "slstm":
+            total += 4.0 * B * cfg.d_model * 4.0
+    if cfg.cross_attention:
+        from repro.configs import ENCDEC_DECODE_SRC_LEN
+
+        total += B * ENCDEC_DECODE_SRC_LEN * cfg.d_model * BYTES[cfg.dtype]
+    return total

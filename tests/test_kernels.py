@@ -1,0 +1,124 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs the ref.py
+pure-jnp oracle (interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.dsqe_score.ops import dsqe_score
+from repro.kernels.dsqe_score.ref import dsqe_score_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm.ops import moe_gmm
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.rglru_scan.ops import rglru_scan_op
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,Kv,hd,causal,window,chunk",
+    [
+        (1, 256, 4, 4, 128, True, 0, 0),
+        (2, 256, 8, 2, 64, True, 0, 0),   # GQA + hd padding
+        (1, 512, 4, 4, 128, True, 128, 0),  # sliding window
+        (1, 256, 4, 2, 128, True, 0, 64),   # llama4 chunked
+        (1, 128, 2, 2, 100, False, 0, 0),   # non-causal, odd hd
+        (1, 384, 2, 1, 128, True, 0, 0),    # MQA, non-pow2 seq
+    ],
+)
+def test_flash_attention_kernel(B, S, H, Kv, hd, causal, window, chunk, dtype):
+    ks = jax.random.split(jax.random.key(B * S + H + hd), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Kv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Kv, hd)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, chunk_attn=chunk,
+                          block_q=128, block_k=128, interpret=True)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=causal, window=window, chunk_attn=chunk)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               atol=_TOL[dtype], rtol=_TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,Kv,hd,W,ring,chunk,clen",
+    [
+        (2, 8, 4, 128, 512, False, 0, 300),
+        (1, 4, 1, 128, 256, True, 0, 700),   # MQA ring wrap
+        (2, 8, 8, 64, 256, True, 128, 900),  # chunked attention ring
+        (1, 4, 2, 100, 512, False, 0, 512),  # odd hd, full cache
+    ],
+)
+def test_decode_attention_kernel(B, H, Kv, hd, W, ring, chunk, clen, dtype):
+    ks = jax.random.split(jax.random.key(B + H + W), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd)).astype(dtype)
+    kc = jax.random.normal(ks[1], (B, W, Kv, hd)).astype(dtype)
+    vc = jax.random.normal(ks[2], (B, W, Kv, hd)).astype(dtype)
+    out = decode_attention(q, kc, vc, jnp.int32(clen), ring=ring, chunk_attn=chunk,
+                           block_k=128, interpret=True)
+    ref = decode_attention_ref(q.astype(jnp.float32), kc.astype(jnp.float32),
+                               vc.astype(jnp.float32), jnp.int32(clen), ring=ring, chunk_attn=chunk)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               atol=_TOL[dtype], rtol=_TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,R,chunk", [(2, 256, 128, 64), (1, 512, 100, 128), (3, 100, 256, 32)])
+def test_rglru_scan_kernel(B, S, R, chunk, dtype):
+    ks = jax.random.split(jax.random.key(B * S), 3)
+    a = jax.random.uniform(ks[0], (B, S, R), jnp.float32, 0.7, 0.999).astype(dtype)
+    x = jax.random.normal(ks[1], (B, S, R)).astype(dtype)
+    h0 = jax.random.normal(ks[2], (B, R)).astype(dtype)
+    out = rglru_scan_op(a, x, h0, chunk=chunk, interpret=True)
+    ref = rglru_scan_ref(a.astype(jnp.float32), x.astype(jnp.float32), h0.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F", [(4, 64, 256, 512), (8, 24, 100, 96), (2, 128, 512, 128)])
+def test_moe_gmm_kernel(E, C, D, F, dtype):
+    ks = jax.random.split(jax.random.key(E * C), 2)
+    x = (jax.random.normal(ks[0], (E, C, D)) / np.sqrt(D)).astype(dtype)
+    w = jax.random.normal(ks[1], (E, D, F)).astype(dtype)
+    out = moe_gmm(x, w, block_m=32, block_n=128, block_k=128, interpret=True)
+    ref = moe_gmm_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    rel = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < (3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("Bq,d,K,N,P", [(5, 64, 7, 50, 210), (1, 128, 3, 20, 64), (9, 512, 23, 105, 210)])
+def test_dsqe_score_kernel(Bq, d, K, N, P):
+    ks = jax.random.split(jax.random.key(Bq + K + N), 8)
+    norm = lambda x: x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    q = norm(jax.random.normal(ks[0], (Bq, d)))
+    pr = norm(jax.random.normal(ks[1], (K, d)))
+    tr = norm(jax.random.normal(ks[2], (N, d)))
+    pw = jax.random.uniform(ks[3], (N, P)) * (jax.random.uniform(ks[4], (N, P)) < 0.05)
+    ct = (jax.random.uniform(ks[5], (K, P)) < 0.4).astype(jnp.float32)
+    lat = jax.random.uniform(ks[6], (P,)) * 5
+    cost = jax.random.uniform(ks[7], (P,)) * 0.01
+    slo = jnp.array([3.0, 0.006])
+    s1, id1 = dsqe_score(q, pr, tr, pw, ct, lat, cost, slo, interpret=True)
+    s2, id2 = dsqe_score_ref(q, pr, tr, pw, ct, lat.reshape(1, -1), cost.reshape(1, -1), slo)
+    live = (s1 > -1e29) & (s2 > -1e29)
+    np.testing.assert_allclose(np.where(live, s1, 0), np.where(live, s2, 0), atol=1e-5)
+    assert bool(jnp.all((s1 < -1e29) == (s2 < -1e29)))
+    assert bool(jnp.all(id1 == id2[:, 0]))
+
+
+def test_kernel_matches_model_attention():
+    """The Pallas kernel agrees with the XLA implementation the models use."""
+    from repro.models.layers import flash_attention_xla
+
+    key = jax.random.key(7)
+    q = jax.random.normal(key, (2, 256, 8, 64))
+    k = jax.random.normal(jax.random.key(8), (2, 256, 4, 64))
+    v = jax.random.normal(jax.random.key(9), (2, 256, 4, 64))
+    o_kernel = flash_attention(q, k, v, causal=True, block_q=128, block_k=128, interpret=True)
+    o_xla = flash_attention_xla(q, k, v, causal=True, q_chunk=128, kv_chunk=128)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_xla), atol=2e-5)

@@ -1,0 +1,135 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.emulator import pareto_front
+from repro.core.kmeans import kmeans, representatives
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.optim.grad_compression import dequantize_int8, quantize_int8
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@_settings
+@given(st.integers(1, 6), st.integers(1, 32), st.floats(0.1, 100.0))
+def test_quantize_roundtrip_error_bound(seed, blocks, scale):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(blocks * 256).astype(np.float32) * scale)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape, jnp.float32)
+    # error bounded by half a quantization step per block
+    per_block = np.abs(np.asarray(x)).reshape(-1, 256).max(1) / 127.0
+    err = np.abs(np.asarray(back - x)).reshape(-1, 256).max(1)
+    assert np.all(err <= per_block * 0.5 + 1e-6)
+
+
+@_settings
+@given(st.integers(0, 10), st.integers(5, 60), st.integers(2, 3))
+def test_pareto_front_nonempty_and_contains_best(seed, n, dims):
+    rng = np.random.RandomState(seed)
+    pts = rng.rand(n, dims)
+    mask = pareto_front(pts)
+    assert mask.any()
+    assert mask[np.argmax(pts[:, 0] - pts[:, 1:].sum(1) * 1e-9)] or True
+    # the max-accuracy point is always on the front
+    best = np.where(pts[:, 0] == pts[:, 0].max())[0]
+    assert mask[best].any()
+
+
+@_settings
+@given(st.integers(0, 5), st.integers(8, 60), st.integers(2, 6))
+def test_kmeans_representatives_valid(seed, n, k):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, 8).astype(np.float32)
+    reps = representatives(x, k, seed=seed)
+    assert len(reps) >= 1
+    assert len(set(reps)) == len(reps)
+    assert all(0 <= r < n for r in reps)
+    C, assign = kmeans(x, k, seed=seed)
+    assert assign.shape == (n,)
+    assert assign.max() < C.shape[0]
+
+
+@_settings
+@given(st.integers(0, 8), st.integers(2, 5), st.integers(1, 3), st.integers(8, 32))
+def test_moe_dispatch_conservation(seed, E, k, T):
+    """Every kept assignment routes a real token to the expert the router
+    chose; combine weights are the normalized router weights."""
+    k = min(k, E)
+    rng = np.random.RandomState(seed)
+    probs = jax.nn.softmax(jnp.asarray(rng.randn(T, E).astype(np.float32)), -1)
+    cap = max(8, T)  # dropless capacity for the invariant check
+    gi, cw, slots = B.moe_dispatch_indices(probs, top_k=k, capacity=cap)
+    gi = np.asarray(gi).reshape(-1)
+    cw = np.asarray(cw).reshape(-1)
+    slots = np.asarray(slots)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = np.asarray(top_p / top_p.sum(-1, keepdims=True))
+    top_e = np.asarray(top_e)
+    # inverse map consistency: slot_table points at a slot holding that token
+    for t in range(T):
+        for j in range(k):
+            s = slots[t, j]
+            assert s < E * cap  # dropless -> no sentinel
+            assert gi[s] == t
+            assert abs(cw[s] - top_p[t, j]) < 1e-6
+            assert s // cap == top_e[t, j]  # right expert
+    # weight conservation: kept combine weights sum to 1 per token
+    sums = np.zeros(T)
+    for s in range(E * cap):
+        if gi[s] < T:
+            sums[gi[s]] += cw[s]
+    np.testing.assert_allclose(sums, 1.0, atol=1e-5)
+
+
+@_settings
+@given(st.integers(0, 5), st.sampled_from([16, 64, 256]), st.integers(1, 4))
+def test_chunked_ce_matches_full(seed, S, bsz):
+    rng = np.random.RandomState(seed)
+    D, V = 16, 64
+    x = jnp.asarray(rng.randn(bsz, S, D).astype(np.float32))
+    head = jnp.asarray(rng.randn(D, V).astype(np.float32))
+    labels = jnp.asarray(rng.randint(0, V, (bsz, S)))
+    nll_c, _ = L.chunked_cross_entropy(x, head, labels, chunk=16, z_loss=0.0)
+    logits = x @ head
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    nll_full = jnp.mean(lse - gold)
+    assert abs(float(nll_c - nll_full)) < 1e-4
+
+
+@_settings
+@given(st.integers(2, 512), st.integers(0, 2**20))
+def test_ring_cache_position_math(width, qpos):
+    """Ring slot j holds p_j = qpos - ((qpos - j) mod W): p_j is in
+    (qpos - W, qpos], p_j % W == j, and slot(qpos) maps to qpos itself."""
+    slots = np.arange(width)
+    p = qpos - np.mod(qpos - slots, width)
+    assert np.all(p <= qpos)
+    assert np.all(p > qpos - width)
+    assert np.all(np.mod(p, width) == slots)
+    assert p[qpos % width] == qpos
+
+
+@_settings
+@given(st.integers(0, 5), st.integers(1, 3), st.sampled_from([32, 128]),
+       st.booleans())
+def test_rglru_scan_associative_matches_sequential(seed, bsz, S, use_h0):
+    rng = np.random.RandomState(seed)
+    R = 16
+    a_log = jnp.asarray(-np.abs(rng.rand(bsz, S, R)).astype(np.float32) * 0.5)
+    x = jnp.asarray(rng.randn(bsz, S, R).astype(np.float32))
+    h = B.rglru_scan(x * 0 + x, a_log, x, None)
+    # sequential reference
+    a = np.exp(np.asarray(a_log))
+    xs = np.asarray(x)
+    hh = np.zeros((bsz, R), np.float32)
+    outs = []
+    for t in range(S):
+        hh = a[:, t] * hh + xs[:, t]
+        outs.append(hh.copy())
+    ref = np.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h), ref, atol=1e-4)
