@@ -84,6 +84,19 @@ def bench_fig4() -> None:
     _csv("fig4_slo", (time.time() - t0) * 1e6, f"relaxed_latency_violation={relaxed:.3f}")
 
 
+def bench_batch() -> None:
+    from benchmarks import batch_speedup as bs
+
+    t0 = time.time()
+    rows = bs.run()
+    print("\n=== Batch engine: scalar vs vectorized emulator ===")
+    print(bs.render(rows))
+    best = max(rows, key=lambda r: r.speedup)
+    _csv("batch_speedup", (time.time() - t0) * 1e6,
+         f"best_speedup={best.speedup:.1f}x;prefix_hit_rate={best.hit_rate:.2f};"
+         f"exact={all(r.exact_match for r in rows)}")
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline as rl
     from repro.perf.roofline import render
@@ -133,6 +146,7 @@ def bench_kernels() -> None:
 
 
 BENCHES = {
+    "batch": bench_batch,
     "kernels": bench_kernels,
     "table3": bench_table3,
     "table4": bench_table4,

@@ -8,6 +8,7 @@ Two subsystems (paper §3):
     and Runtime Path Selection under SLO constraints.
 """
 from repro.core.paths import PathSpace, Path  # noqa: F401
+from repro.core.pipeline import BatchedPipelineExecutor, PipelineExecutor  # noqa: F401
 from repro.core.emulator import Emulator, EvalTable  # noqa: F401
 from repro.core.cca import critical_component_analysis  # noqa: F401
 from repro.core.dsqe import DSQE, train_dsqe  # noqa: F401

@@ -39,6 +39,9 @@ EDGE_DEVICES: dict[str, DeviceProfile] = {
 CLOUD_RTT_S = 0.18  # request RTT + queuing to a cloud endpoint
 CLOUD_TFLOPS = 900.0  # aggregated cloud accelerator slice for one request
 CLOUD_UTIL = 0.5
+# the device profile every cloud model call runs against (shared by the
+# scalar latency model below and the batched engine's precomputed constants)
+CLOUD_DEVICE = DeviceProfile("cloud", CLOUD_TFLOPS, 8000.0, 640, 0, CLOUD_UTIL, 0.0)
 
 
 @dataclass(frozen=True)
@@ -72,10 +75,9 @@ def model_call_latency_s(model: ModelProfile, device: DeviceProfile,
                          prompt_tokens: int, out_tokens: int = 0) -> float:
     """TTFT (+ optional decode tail) for one model call on a device."""
     if model.placement == "cloud":
-        cloud = DeviceProfile("cloud", CLOUD_TFLOPS, 8000.0, 640, 0, CLOUD_UTIL, 0.0)
-        t = CLOUD_RTT_S + prefill_latency_s(model, cloud, prompt_tokens)
+        t = CLOUD_RTT_S + prefill_latency_s(model, CLOUD_DEVICE, prompt_tokens)
         if out_tokens:
-            t += decode_latency_s(model, cloud, out_tokens)
+            t += decode_latency_s(model, CLOUD_DEVICE, out_tokens)
         return t
     t = prefill_latency_s(model, device, prompt_tokens)
     if out_tokens:

@@ -24,7 +24,8 @@ from repro.core.devices import DeviceProfile, EDGE_DEVICES
 from repro.core.domains import DomainData, Query
 from repro.core.kmeans import representatives
 from repro.core.paths import Path, PathSpace
-from repro.core.pipeline import PipelineExecutor, StageState
+from repro.core.pipeline import (BatchedPipelineExecutor, PipelineExecutor,
+                                 StageState)
 
 
 @dataclass
@@ -55,6 +56,7 @@ class Emulator:
         self.device = device or EDGE_DEVICES["m4"]
         self.seed = seed
         self.exec = PipelineExecutor(domain, self.device, seed=seed)
+        self.batched = BatchedPipelineExecutor(self.exec, space.paths)
         self._stage_cache: dict = {}
         self._cache_hits = 0
         self._cache_misses = 0
@@ -88,8 +90,13 @@ class Emulator:
     # -- Algorithm 1 ----------------------------------------------------------
 
     def explore(self, query_ids: list[int], budget: float | None = None,
-                lam: int = 0) -> EvalTable:
-        """budget None -> exhaustive; otherwise the paper's B factor."""
+                lam: int = 0, batched: bool = True) -> EvalTable:
+        """budget None -> exhaustive; otherwise the paper's B factor.
+
+        ``batched=True`` sweeps whole path blocks per query through the
+        vectorized engine; ``batched=False`` is the scalar reference oracle.
+        Both produce bit-identical tables and cache statistics.
+        """
         queries = [self.domain.queries[i] for i in query_ids]
         P = len(self.space.paths)
         Q = len(queries)
@@ -106,10 +113,29 @@ class Emulator:
             acc[qi, pj], lat[qi, pj], cost[qi, pj] = a, l, c
             done[qi, pj] = True
 
+        def eval_row(qi: int, pjs) -> None:
+            """One query against a block of paths, on the selected engine."""
+            if not batched:
+                for pj in pjs:
+                    eval_cell(qi, pj)
+                return
+            js = np.asarray(pjs, np.int64)
+            row_done = done[qi]
+            if row_done.any():
+                js = js[~row_done[js]]
+            if js.size == 0:
+                return
+            q = queries[qi]
+            states, inv, n_new = self.batched.block_states(q, js, self._stage_cache)
+            self._cache_misses += n_new
+            self._cache_hits += 3 * int(js.size) - n_new
+            a, l, c = self.batched.finish_block(q, states, inv, js)
+            acc[qi, js], lat[qi, js], cost[qi, js] = a, l, c
+            done[qi, js] = True
+
         if budget is None:
             for qi in range(Q):
-                for pj in range(P):
-                    eval_cell(qi, pj)
+                eval_row(qi, range(P))
         else:
             # stage 1: stratified representative queries (k-means per type)
             n_rep_total = max(1, min(Q, int(budget * math.sqrt(Q))))
@@ -125,8 +151,7 @@ class Emulator:
                 reps.extend(t_idx[s] for s in sel)
             reps = sorted(set(reps))
             for qi in reps:
-                for pj in range(P):
-                    eval_cell(qi, pj)
+                eval_row(qi, range(P))
 
             # rank paths per type: accuracy desc, then latency (λ=1) or cost
             k_paths = max(1, min(P, int(budget * math.sqrt(P))))
@@ -148,8 +173,7 @@ class Emulator:
                 sel = list(top_by_type[queries[qi].qtype])
                 n_random = max(1, k_paths // 4)
                 sel += rng.sample(range(P), min(n_random, P))
-                for pj in set(sel):
-                    eval_cell(qi, pj)
+                eval_row(qi, sorted(set(sel)))
 
         total = self._cache_hits + self._cache_misses
         return EvalTable(

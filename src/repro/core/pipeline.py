@@ -15,11 +15,13 @@ from __future__ import annotations
 import hashlib
 import math
 from dataclasses import dataclass, field, replace
+from typing import Sequence
 
 import numpy as np
 
-from repro.core.devices import (DeviceProfile, ModelProfile,
-                                model_call_cost_usd, model_call_latency_s)
+from repro.core.devices import (CLOUD_DEVICE, CLOUD_RTT_S, DeviceProfile,
+                                ModelProfile, model_call_cost_usd,
+                                model_call_latency_s)
 from repro.core.domains import TYPE_NEEDS, DomainData, Query
 from repro.core.paths import MODEL_CATALOG, ComponentChoice, Path
 from repro.core.retrieval import VectorStore
@@ -55,6 +57,10 @@ class PipelineExecutor:
         self.store = VectorStore(domain.chunk_embeddings, n_clusters=0, seed=seed)
         self._helper = MODEL_CATALOG[HELPER_MODEL]
         self._hyde_cache: dict[int, np.ndarray] = {}
+        self._sb_cache: dict[int, np.ndarray] = {}
+        # search memo: (qid, stepback?, hyde?, k) fully determines the query
+        # vector and therefore the result — pure dedup, never changes results
+        self._search_cache: dict[tuple, object] = {}
 
     # -- module managers ----------------------------------------------------
 
@@ -86,30 +92,46 @@ class PipelineExecutor:
         raise KeyError(choice.impl)
 
     def _query_vec(self, q: Query, st: StageState) -> np.ndarray:
-        vec = self.domain.query_embeddings[q.qid]
         if "+sb" in st.query_emb_key:
             # step-back rewrite: the SLM re-states the query, emphasising its
             # key entities (real re-embedding of the expanded text)
-            vec = embed_text(q.text + " " + q.text + " clarify context specification")
-        return vec
+            vec = self._sb_cache.get(q.qid)
+            if vec is None:
+                vec = embed_text(q.text + " " + q.text + " clarify context specification")
+                self._sb_cache[q.qid] = vec
+            return vec
+        return self.domain.query_embeddings[q.qid]
+
+    def _search(self, q: Query, st: StageState, k: int, hyde: bool):
+        """Memoized vector search. The query vector is fully determined by
+        (qid, stepback-rewrite?, hyde-blend?), so (qid, sb, hyde, k) is an
+        exact identity key — the memo dedups repeated searches across stage
+        prefixes without changing any result."""
+        key = (q.qid, "+sb" in st.query_emb_key, hyde, k)
+        res = self._search_cache.get(key)
+        if res is None:
+            vec = self._query_vec(q, st)
+            if hyde:
+                hypo = self._hyde_cache.get(q.qid)
+                if hypo is None:
+                    hypo = embed_text(q.text + " " + q.reference.split("fact-")[0])
+                    self._hyde_cache[q.qid] = hypo
+                vec = vec + 0.5 * hypo
+            res = self.store.search(vec.astype(np.float32), k)
+            self._search_cache[key] = res
+        return res
 
     def run_retrieval(self, q: Query, choice: ComponentChoice, st: StageState) -> StageState:
         if choice.impl == "null":
             return st
         k = int(choice.param("top_k", 4))
         chunk_words = self.domain.profile.chunk_words
-        vec = self._query_vec(q, st)
         search_lat = 0.002 + 2e-6 * len(self.domain.chunks)
         lat = search_lat
         if choice.impl == "hyde":
             # hypothesis generation by the helper SLM, retrieval on the blend
             lat += model_call_latency_s(self._helper, self.device, st.prompt_tokens, out_tokens=60)
-            hypo = self._hyde_cache.get(q.qid)
-            if hypo is None:
-                hypo = embed_text(q.text + " " + q.reference.split("fact-")[0])
-                self._hyde_cache[q.qid] = hypo
-            vec = vec + 0.5 * hypo
-        res = self.store.search(vec.astype(np.float32), k)
+        res = self._search(q, st, k, hyde=choice.impl == "hyde")
         retrieved = tuple(int(i) for i in res.ids)
         rel = set(q.relevant_chunks)
         grounding = len(rel.intersection(retrieved)) / max(len(rel), 1)
@@ -146,8 +168,7 @@ class PipelineExecutor:
             thr = float(choice.param("threshold", 0.35))
             if st.grounding < thr + 0.3:
                 # re-retrieve wider (real second search) and merge
-                vec = self._query_vec(q, st)
-                res = self.store.search(vec.astype(np.float32), 2 * max(4, len(st.retrieved)))
+                res = self._search(q, st, 2 * max(4, len(st.retrieved)), hyde=False)
                 merged = tuple(dict.fromkeys(st.retrieved + tuple(int(i) for i in res.ids)))
                 grounding = len(rel.intersection(merged)) / max(len(rel), 1)
                 new_ctx = int(len(merged) * self.domain.profile.chunk_words * 1.3)
@@ -224,3 +245,216 @@ class PipelineExecutor:
         st = self.run_model(q, path.model, st)
         acc = self.judge(q, path, st)
         return acc, st.latency_s, st.cost_usd
+
+
+# ---------------------------------------------------------------------------
+# batched execution engine
+# ---------------------------------------------------------------------------
+
+
+class BatchedPipelineExecutor:
+    """Structure-of-arrays engine: one query against a whole block of paths.
+
+    The three preprocessing stages (qproc / retrieval / cproc) collapse to a
+    handful of distinct stage prefixes (~30 for the default space of ~200
+    paths); they are resolved once per distinct prefix through the scalar
+    stage functions and the shared string-keyed prefix cache.  Model
+    execution and judging — the per-cell hot path — then run as NumPy array
+    ops over the block.
+
+    Parity contract: results are bit-for-bit identical to
+    ``PipelineExecutor.run`` / ``Emulator._eval``.  The same stage functions
+    produce the prefix states, every vectorized float64 expression mirrors
+    the scalar order of operations, and the judge noise hashes the same
+    ``seed:qid:path.key`` strings through blake2b.
+    """
+
+    def __init__(self, scalar: PipelineExecutor, paths: Sequence[Path]):
+        self.scalar = scalar
+        self.paths = list(paths)
+        device = scalar.device
+        P = len(self.paths)
+
+        # -- per-path model constants (mirror model_call_latency_s/_cost) ---
+        # fused (P, 8) matrix, one gather per block; columns:
+        #   0 quality_tier, 1 fixed offset (overhead / cloud RTT),
+        #   2 flops coef (2 * params * 1e9, scalar op order),
+        #   3 compute denom (tflops * 1e12 * util), 4 weight-stream floor (s),
+        #   5 usd/1k input, 6 usd_per_1k_out * OUT_TOKENS, 7 retrieval-null flag
+        self._m_cols = np.empty((P, 8))
+        self._key_bytes = []
+        for j, p in enumerate(self.paths):
+            m = MODEL_CATALOG[p.model.impl]
+            dev = CLOUD_DEVICE if m.placement == "cloud" else device
+            self._m_cols[j] = (
+                m.quality_tier,
+                CLOUD_RTT_S if m.placement == "cloud" else dev.overhead_s,
+                2.0 * m.params_b * 1e9,
+                dev.tflops * 1e12 * dev.util,
+                (m.params_b * 1e9 * 2.0) / (dev.mem_gbps * 1e9),
+                m.usd_per_1k_in,
+                m.usd_per_1k_out * OUT_TOKENS,
+                float(p.retrieval.impl == "null"),
+            )
+            self._key_bytes.append(p.key.encode())
+
+        # -- stage-prefix slot tables (query-independent path structure) ----
+        # slot id per path at each prefix depth, plus the cache-key suffixes
+        # that reproduce the scalar engine's incremental prefix strings.
+        self.path_s1 = np.empty(P, np.int64)
+        self.path_s2 = np.empty(P, np.int64)
+        self.path_s3 = np.empty(P, np.int64)
+        self.s1_suffix: list[str] = []
+        self.s2_suffix: list[str] = []
+        self.s3_suffix: list[str] = []
+        self.s1_choice: list[ComponentChoice] = []
+        self.s2_choice: list[ComponentChoice] = []
+        self.s3_choice: list[ComponentChoice] = []
+        self.s2_parent: list[int] = []
+        self.s3_parent: list[int] = []
+        seen1: dict[str, int] = {}
+        seen2: dict[str, int] = {}
+        seen3: dict[str, int] = {}
+        for j, p in enumerate(self.paths):
+            k1 = "|" + p.qproc.key
+            k2 = k1 + "|" + p.retrieval.key
+            k3 = k2 + "|" + p.cproc.key
+            if k1 not in seen1:
+                seen1[k1] = len(self.s1_suffix)
+                self.s1_suffix.append(k1)
+                self.s1_choice.append(p.qproc)
+            if k2 not in seen2:
+                seen2[k2] = len(self.s2_suffix)
+                self.s2_suffix.append(k2)
+                self.s2_choice.append(p.retrieval)
+                self.s2_parent.append(seen1[k1])
+            if k3 not in seen3:
+                seen3[k3] = len(self.s3_suffix)
+                self.s3_suffix.append(k3)
+                self.s3_choice.append(p.cproc)
+                self.s3_parent.append(seen2[k2])
+            self.path_s1[j] = seen1[k1]
+            self.path_s2[j] = seen2[k2]
+            self.path_s3[j] = seen3[k3]
+        # full-block fast path: every slot present, inverse is path_s3 itself
+        self._full_js = np.arange(P)
+        self._all_s1 = np.arange(len(self.s1_suffix))
+        self._all_s2 = np.arange(len(self.s2_suffix))
+        self._all_s3 = np.arange(len(self.s3_suffix))
+
+    # -- stage resolution ----------------------------------------------------
+
+    def block_states(self, q: Query, js: np.ndarray, cache: dict
+                     ) -> tuple[list[StageState], np.ndarray, int]:
+        """Resolve the preprocessing prefix for every path in ``js``.
+
+        Returns (distinct final states, per-path index into them, number of
+        cache misses).  Each path touches three prefix levels exactly like
+        the scalar walk, so callers can account hits as ``3*len(js) - new``.
+        """
+        ex = self.scalar
+        root = f"q{q.qid}"
+        n_new = 0
+        st0 = None
+        # fast path only for the exact full sweep js == arange(P): every slot
+        # is present and path_s3 doubles as the inverse index
+        if (js.size == len(self.paths) and js[0] == 0
+                and np.array_equal(js, self._full_js)):
+            slots1, slots2 = self._all_s1, self._all_s2
+            slots3, inv = self._all_s3, self.path_s3
+        else:
+            slots1 = np.unique(self.path_s1[js])
+            slots2 = np.unique(self.path_s2[js])
+            slots3, inv = np.unique(self.path_s3[js], return_inverse=True)
+        for s in slots1:
+            key = root + self.s1_suffix[s]
+            if key not in cache:
+                if st0 is None:
+                    st0 = ex.initial_state(q)
+                cache[key] = ex.run_qproc(q, self.s1_choice[s], st0)
+                n_new += 1
+        for s in slots2:
+            key = root + self.s2_suffix[s]
+            if key not in cache:
+                parent = cache[root + self.s1_suffix[self.s2_parent[s]]]
+                cache[key] = ex.run_retrieval(q, self.s2_choice[s], parent)
+                n_new += 1
+        for s in slots3:
+            key = root + self.s3_suffix[s]
+            if key not in cache:
+                parent = cache[root + self.s2_suffix[self.s3_parent[s]]]
+                cache[key] = ex.run_cproc(q, self.s3_choice[s], parent)
+                n_new += 1
+        states = [cache[root + self.s3_suffix[s]] for s in slots3]
+        return states, inv, n_new
+
+    # -- vectorized model + judge -------------------------------------------
+
+    def finish_block(self, q: Query, states: Sequence[StageState],
+                     state_of: np.ndarray, js: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized run_model + judge over a block of paths.
+
+        ``js`` indexes ``self.paths``; ``state_of[i]`` indexes ``states`` for
+        path ``js[i]``.  Returns (accuracy, latency_s, cost_usd) arrays.
+        """
+        ex = self.scalar
+        # per-state scalars in one pass (Python int() keeps truncation exact)
+        cols = np.array([(
+            float(int(st.prompt_tokens * (st.compressed if st.context_tokens else 1.0))),
+            st.latency_s, st.cost_usd, st.grounding, st.compressed,
+            float(st.context_tokens), float(st.ambiguity_resolved),
+            st.reasoning_boost) for st in states])[state_of]
+        prompt = cols[:, 0]
+        m = self._m_cols[js]
+        # run_model: prefill latency (compute vs weight-stream roof) + cost
+        lat = cols[:, 1] + (
+            m[:, 1] + np.maximum(m[:, 2] * prompt / m[:, 3], m[:, 4]))
+        cost = cols[:, 2] + (m[:, 5] * prompt + m[:, 6]) / 1000.0
+
+        # judge oracle, elementwise in the scalar's op order
+        prof = ex.domain.profile
+        needs = TYPE_NEEDS[q.qtype]
+        know = m[:, 0]
+        ground_rag = cols[:, 3] * (0.78 + 0.22 * cols[:, 4]) \
+            * (1.0 - 0.25 * np.maximum(0.0, 1.0 - know)
+               * np.minimum(1.0, cols[:, 5] / 900.0))
+        ground = np.where(m[:, 7] != 0.0, 0.15 + 0.45 * know, ground_rag)
+        resolved = cols[:, 6] != 0.0
+        if q.ambiguity < 0.3:
+            ground = ground * np.where(resolved, 0.78, 1.0)
+        retrieval_term = (needs["retrieval"] * prof.retrieval_weight) \
+            * np.minimum(1.0, ground)
+        reasoning_term = (needs["reasoning"] * prof.reasoning_weight) \
+            * np.minimum(1.0, know + cols[:, 7])
+        wsum = needs["retrieval"] * prof.retrieval_weight + needs["reasoning"] * prof.reasoning_weight
+        base = (retrieval_term + reasoning_term) / max(wsum, 1e-6)
+        if q.ambiguity > 0.5:
+            base = base * np.where(resolved, 1.0, 1.0 - 0.45 * q.ambiguity)
+        base = base * (1.0 - np.maximum(0.0, q.complexity - know) * 0.5)
+        base = 0.25 + 0.72 * base
+
+        h0 = hashlib.blake2b(f"{ex.seed}:{q.qid}:".encode(), digest_size=8)
+        keys = self._key_bytes
+        digests = []
+        for j in js:
+            h = h0.copy()
+            h.update(keys[j])
+            digests.append(h.digest())
+        raw = np.frombuffer(b"".join(digests), "<u8")
+        noise = (raw / 2**64 - 0.5) * 0.14
+        acc = np.clip(base + noise, 0.0, 1.0)
+        return acc, lat, cost
+
+    def run_block(self, q: Query, js: np.ndarray | None = None,
+                  cache: dict | None = None
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Full pipeline for one query over a path block (uncached by default)."""
+        if js is None:
+            js = self._full_js
+        js = np.asarray(js, np.int64)
+        if js.size == 0:
+            empty = np.empty(0)
+            return empty, empty.copy(), empty.copy()
+        states, inv, _ = self.block_states(q, js, {} if cache is None else cache)
+        return self.finish_block(q, states, inv, js)

@@ -30,7 +30,7 @@ from repro import configs as cfglib
 from repro.distributed.sharding import ShardingPolicy
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
-from repro.perf.hlo_analysis import collective_bytes_by_kind
+from repro.perf.hlo_analysis import collective_bytes_by_kind, compiled_cost_analysis
 
 
 def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
@@ -51,7 +51,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compiled_cost_analysis(compiled)
     hlo = compiled.as_text()
     colls = collective_bytes_by_kind(hlo)
 

@@ -42,6 +42,20 @@ _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
 
 
+def compiled_cost_analysis(compiled) -> dict:
+    """Normalize ``jax.stages.Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a per-device list of dicts, newer jax a single dict
+    (and either may return None when the backend offers no analysis).
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
+
 def shape_bytes(type_str: str) -> int:
     """Total bytes of an HLO type string (handles tuples)."""
     total = 0

@@ -134,3 +134,12 @@ class ReplicaFleet:
                 lat = min(lat, backup.stats.p95(default=lat))
             return out, {"replica": primary.rid, "latency_s": lat, "attempts": attempts + 1}
         raise RuntimeError(f"request failed after retries: {last_err!r}")
+
+    def submit_many(self, requests, hedge: bool = True):
+        """Dispatch a batch of requests across the fleet.
+
+        Each request keeps the full failover + hedging treatment of
+        ``submit``; batching exists so callers (``EcoLLMServer.handle_batch``)
+        have a single dispatch point to evolve toward parallel replicas.
+        """
+        return [self.submit(r, hedge=hedge) for r in requests]

@@ -62,33 +62,50 @@ class EcoLLMServer:
         query, path = job
         return self.executor.run(query, path)
 
-    def handle(self, req: Request) -> Response:
+    def _resolve_query(self, req: Request):
         if req.qid is not None:
-            query = self.domain.queries[req.qid]
-            emb = self.domain.query_embeddings[req.qid]
-        else:
-            # open-world query: embed the raw prompt; judge against the
-            # closest known query's metadata (OOD path)
-            emb = embed_text(req.prompt)
-            sims = self.domain.query_embeddings @ emb
-            query = self.domain.queries[int(np.argmax(sims))]
+            return self.domain.queries[req.qid], self.domain.query_embeddings[req.qid]
+        # open-world query: embed the raw prompt; judge against the
+        # closest known query's metadata (OOD path)
+        emb = embed_text(req.prompt)
+        sims = self.domain.query_embeddings @ emb
+        return self.domain.queries[int(np.argmax(sims))], emb
 
-        decision = self.rps.select(emb, req.slo)
-        (acc, lat, cost), meta = self.fleet.submit((query, decision.path))
-        total_lat = lat if req.qid is not None else lat  # modeled pipeline latency
-        self.tracker.record(req.slo, total_lat, cost)
+    def _respond(self, req: Request, query, decision, result, meta) -> Response:
+        acc, lat, cost = result
+        self.tracker.record(req.slo, lat, cost)
         return Response(
             text=f"[{decision.path.model.impl}] resolved {query.qtype} query",
             accuracy=acc,
-            latency_s=total_lat,
+            latency_s=lat,
             cost_usd=cost,
             path_key=decision.path.key,
             selection_overhead_s=decision.overhead_s,
-            slo_ok=req.slo.ok(total_lat, cost),
+            slo_ok=req.slo.ok(lat, cost),
             replica=meta["replica"],
             meta={"set_id": decision.set_id, "fallback": decision.used_fallback,
                   "attempts": meta["attempts"]},
         )
+
+    def handle(self, req: Request) -> Response:
+        query, emb = self._resolve_query(req)
+        decision = self.rps.select(emb, req.slo)
+        result, meta = self.fleet.submit((query, decision.path))
+        return self._respond(req, query, decision, result, meta)
+
+    def handle_batch(self, reqs: list[Request]) -> list[Response]:
+        """Batch entry point: one vectorized RPS pass selects paths for the
+        whole batch, then the fleet executes the chosen paths."""
+        if not reqs:
+            return []
+        resolved = [self._resolve_query(r) for r in reqs]
+        embs = np.stack([emb for _, emb in resolved])
+        decisions = self.rps.select_batch(embs, [r.slo for r in reqs])
+        jobs = [(query, d.path) for (query, _), d in zip(resolved, decisions)]
+        outcomes = self.fleet.submit_many(jobs)
+        return [self._respond(req, query, d, result, meta)
+                for req, (query, _), d, (result, meta)
+                in zip(reqs, resolved, decisions, outcomes)]
 
     def system_state(self) -> dict:
         return {

@@ -14,7 +14,9 @@ from repro.core.slo import SLO
 
 @pytest.fixture(scope="module")
 def setup():
-    dom = build_domain("iot_security", n_queries=80, seed=0)
+    # small but representative: the batched engine makes exploration cheap,
+    # so the fixture cost is dominated by DSQE training downstream
+    dom = build_domain("iot_security", n_queries=64, seed=0)
     space = PathSpace()
     train_idx, test_idx = train_test_split(dom, 0.3)
     emu = Emulator(dom, space, seed=0)
@@ -124,6 +126,70 @@ def test_pareto_front_properties():
             & np.any(front != p, axis=1)
         )
         assert not dominated.any()
+
+
+def test_pareto_front_edge_cases():
+    # single point is trivially on the front
+    assert pareto_front(np.array([[0.5, 1.0, 2.0]])).tolist() == [True]
+    # exact duplicate rows never dominate each other: both survive
+    pts = np.array([[0.9, 1.0, 1.0], [0.9, 1.0, 1.0], [0.5, 2.0, 2.0]])
+    assert pareto_front(pts).tolist() == [True, True, False]
+    # fully-dominated chain: only the best point survives
+    chain = np.array([[0.1, 5.0], [0.2, 4.0], [0.3, 3.0], [0.9, 1.0]])
+    assert pareto_front(chain).tolist() == [False, False, False, True]
+    # equal accuracy: the cheaper point dominates the pricier one
+    assert pareto_front(np.array([[0.9, 1.0], [0.9, 2.0]])).tolist() == [True, False]
+
+
+def test_rps_fallback_mask_degradation():
+    """OOD fallback degrades gracefully: critical-set ∧ accuracy floor ->
+    accuracy floor only -> any path, always minimizing the λ metric."""
+    import jax
+
+    from repro.core.cca import CCAResult
+    from repro.core.dsqe import DSQE, init_dsqe
+    from repro.core.emulator import EvalTable
+
+    spec = {
+        "qproc": {"null": {}},
+        "retrieval": {"null": {}, "basic_rag": {"top_k": [2]}},
+        "cproc": {"null": {}},
+        "model": {"internlm2-1.8b": {}, "kimi-k2-cloud": {}},
+    }
+    space = PathSpace(spec)
+    paths = space.paths
+    assert len(paths) == 4
+    # p0 edge/no-rag, p1 cloud/no-rag, p2 edge/rag, p3 cloud/rag
+    acc = np.array([[0.9, 0.75, 0.8, 0.72]] * 2)
+    lat = np.array([[0.4, 2.0, 1.5, 0.5]] * 2)
+    cost = np.array([[0.001, 0.003, 0.002, 0.004]] * 2)
+    table = EvalTable([0, 1], list(paths), acc, lat, cost, np.ones((2, 4), bool))
+    vocab = [
+        (("model", "kimi-k2-cloud"),),  # satisfied by p1, p3
+        (("qproc", "stepback(abstraction=1)"),),  # satisfied by no path
+    ]
+    cca = CCAResult(critical_sets=[vocab[0]] * 2, best_path=[0, 2],
+                    set_vocab=vocab, set_ids=np.array([0, 0]))
+    emb = np.random.RandomState(0).randn(2, 8).astype(np.float32)
+    dsqe = DSQE(params=jax.tree.map(np.asarray, init_dsqe(jax.random.key(0), 8, 2)),
+                n_sets=2)
+    slo = SLO()
+
+    rps = RuntimePathSelector(space, dsqe, cca, table, emb, lam=0, acc_floor=0.7)
+    # 1) critical set and floor both satisfiable: cheapest cloud path
+    assert rps._fallback(0, slo) is paths[1]
+    # 2) no path contains the critical set: degrade to floor-only, min cost
+    assert rps._fallback(1, slo) is paths[0]
+    # 3) floor above every path: degrade to all paths, min cost
+    rps_hi = RuntimePathSelector(space, dsqe, cca, table, emb, lam=0, acc_floor=0.99)
+    assert rps_hi._fallback(0, slo) is paths[0]
+    # λ=1 flips the secondary metric to latency in every tier
+    rps_lat = RuntimePathSelector(space, dsqe, cca, table, emb, lam=1, acc_floor=0.7)
+    assert rps_lat._fallback(0, slo) is paths[3]  # fastest cloud path
+    assert rps_lat._fallback(1, slo) is paths[0]  # fastest above floor
+    # an impossible SLO routes select() through the fallback chain
+    d = rps.select(emb[0], SLO(max_latency_s=1e-9, max_cost_usd=0.0))
+    assert d.used_fallback and d.path in (paths[0], paths[1])
 
 
 def test_kernel_and_reference_rps_agree(setup):

@@ -41,6 +41,7 @@ def test_checkpoint_async_and_atomic(tmp_path):
     assert ckpt.latest_step() == 5
 
 
+@pytest.mark.slow
 def test_train_restart_determinism(tmp_path):
     """Kill/restore: resumed run reproduces the uninterrupted run exactly."""
     from repro.launch.train import train

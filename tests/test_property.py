@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.emulator import pareto_front
 from repro.core.kmeans import kmeans, representatives

@@ -12,6 +12,7 @@ from repro.configs import get_config
 from repro.models import lm
 from repro.models.config import SHAPE_SUITE, ShapeSpec
 from repro.perf.cost_model import cell_cost
+from repro.perf.hlo_analysis import compiled_cost_analysis
 from repro.perf.roofline import roofline_for_cell
 
 
@@ -28,8 +29,8 @@ def test_xla_cost_analysis_undercounts_scan():
 
     x = jax.ShapeDtypeStruct((32, 128), jnp.float32)
     w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    f1 = jax.jit(make(1)).lower(x, w).compile().cost_analysis()["flops"]
-    f8 = jax.jit(make(8)).lower(x, w).compile().cost_analysis()["flops"]
+    f1 = compiled_cost_analysis(jax.jit(make(1)).lower(x, w).compile())["flops"]
+    f8 = compiled_cost_analysis(jax.jit(make(8)).lower(x, w).compile())["flops"]
     assert f8 < 2 * f1  # trip count NOT multiplied (would be ~8x otherwise)
 
 
@@ -47,7 +48,7 @@ def test_analytic_matches_compiled_unrolled_forward():
         return h.sum()
 
     comp = jax.jit(fwd).lower(params, tokens).compile()
-    hlo_flops = comp.cost_analysis()["flops"]
+    hlo_flops = compiled_cost_analysis(comp)["flops"]
 
     cost = cell_cost(cfg, shape)
     # prefill analytic includes the final-logits matvec the probe lacks;
