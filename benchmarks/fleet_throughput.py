@@ -1,0 +1,134 @@
+"""Micro-benchmark: sequential vs concurrent `ReplicaFleet.submit_many`.
+
+Runs an identical batch through the same 4-replica fleet twice — once with
+`max_workers=1` (the deterministic sequential dispatcher, the pre-threaded
+baseline) and once with the concurrent work-stealing dispatcher — on a
+workload with one straggling replica, so batch wall-clock should track the
+max over replicas instead of the sum over calls (target >= 3x on 4 replicas).
+
+A second pass injects failures and a mid-batch heartbeat eviction and then
+verifies the dispatcher's exactness contract: every request completes exactly
+once, in order, and the fleet-level hedge/failover/requeue counters match the
+per-request metadata exactly.
+
+  PYTHONPATH=src python -m benchmarks.fleet_throughput
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+from repro.runtime.fleet import Replica, ReplicaFleet
+
+BASE_WORK_S = 0.003  # per-request execution time (real sleep)
+
+
+def _make_replica_factory(straggler_rid: int = 0, straggle_rate: float = 0.3,
+                          fail_rid: int = -1, fail_rate: float = 0.0):
+    def make(rid: int) -> Replica:
+        def execute(request):
+            time.sleep(BASE_WORK_S)
+            return ("done", request)
+        return Replica(
+            rid=rid, execute=execute,
+            straggle_rate=straggle_rate if rid == straggler_rid else 0.0,
+            straggle_s=0.25,  # real sleep bounded at 50ms inside Replica.call
+            fail_rate=fail_rate if rid == fail_rid else 0.0)
+    return make
+
+
+@dataclass
+class Result:
+    n_requests: int
+    seq_wall_s: float
+    conc_wall_s: float
+    speedup: float
+    hedges: int
+    requeues: int
+    cancelled: int
+    lost: int
+    duplicated: int
+    counters_exact: bool
+
+
+def _run_batch(fleet: ReplicaFleet, requests):
+    t0 = time.perf_counter()
+    outcomes = fleet.submit_many(requests)
+    return outcomes, time.perf_counter() - t0
+
+
+def run(n_requests: int = 64, n_replicas: int = 4, seed: int = 0) -> Result:
+    requests = list(range(n_requests))
+
+    seq = ReplicaFleet(_make_replica_factory(), n=n_replicas, seed=seed,
+                       max_workers=1)
+    _, seq_wall = _run_batch(seq, requests)
+    seq.close()
+
+    conc = ReplicaFleet(_make_replica_factory(), n=n_replicas, seed=seed)
+    # warm the rolling wall-clock p95s so hedging is armed for the timed run
+    conc.submit_many(requests[: 8 * n_replicas])
+    _, conc_wall = _run_batch(conc, requests)
+    hedges = conc.hedge_count
+    conc.close()
+
+    # -- exactness under injected faults + a mid-batch eviction -------------
+    fleet = ReplicaFleet(_make_replica_factory(fail_rid=1, fail_rate=0.3),
+                         n=n_replicas, seed=seed)
+    fleet.submit_many(requests[: 8 * n_replicas])
+    h0, f0, r0 = fleet.hedge_count, fleet.failover_count, fleet.requeue_count
+    evictor = threading.Timer(
+        0.01, lambda: fleet.heartbeat(responding={0, 1}) or
+        fleet.heartbeat(responding={0, 1}) or fleet.heartbeat(responding={0, 1}))
+    evictor.start()
+    chaos_outcomes, _ = _run_batch(fleet, requests)
+    evictor.join()
+
+    payloads = [res[1] for res, meta in chaos_outcomes]
+    lost = len([r for r in requests if r not in payloads])
+    duplicated = len(payloads) - len(set(payloads))
+    in_order = payloads == requests
+    counters_exact = (
+        in_order
+        and sum(m["hedges"] for _, m in chaos_outcomes) == fleet.hedge_count - h0
+        and sum(m["attempts"] - 1 for _, m in chaos_outcomes)
+        == fleet.failover_count - f0
+        and sum(m["requeues"] for _, m in chaos_outcomes)
+        == fleet.requeue_count - r0)
+    requeues = fleet.requeue_count - r0
+    cancelled = fleet.cancelled_count
+    fleet.close()
+
+    return Result(
+        n_requests=n_requests, seq_wall_s=seq_wall, conc_wall_s=conc_wall,
+        speedup=seq_wall / conc_wall, hedges=hedges, requeues=requeues,
+        cancelled=cancelled, lost=lost, duplicated=duplicated,
+        counters_exact=counters_exact)
+
+
+def render(r: Result) -> str:
+    return "\n".join([
+        f"batch of {r.n_requests} across 4 replicas (one straggler):",
+        f"  sequential submit_many   {r.seq_wall_s*1e3:8.1f} ms",
+        f"  concurrent submit_many   {r.conc_wall_s*1e3:8.1f} ms",
+        f"  speedup                  {r.speedup:8.1f} x  (target >= 3x)",
+        f"  hedges fired             {r.hedges:8d}",
+        "under injected failures + mid-batch eviction:",
+        f"  lost requests            {r.lost:8d}",
+        f"  duplicated requests      {r.duplicated:8d}",
+        f"  requeues / cancelled     {r.requeues:4d} / {r.cancelled:4d}",
+        f"  counters exact           {str(r.counters_exact):>8}",
+    ])
+
+
+def main() -> None:
+    r = run()
+    print(render(r))
+    assert r.speedup >= 3.0, f"concurrent dispatch only {r.speedup:.1f}x"
+    assert r.lost == 0 and r.duplicated == 0, "requests lost or double-counted"
+    assert r.counters_exact, "fleet counters do not match per-request metadata"
+
+
+if __name__ == "__main__":
+    main()

@@ -97,6 +97,18 @@ def bench_batch() -> None:
          f"exact={all(r.exact_match for r in rows)}")
 
 
+def bench_fleet() -> None:
+    from benchmarks import fleet_throughput as ft
+
+    t0 = time.time()
+    r = ft.run()
+    print("\n=== Fleet: sequential vs concurrent submit_many ===")
+    print(ft.render(r))
+    _csv("fleet_throughput", (time.time() - t0) * 1e6,
+         f"speedup={r.speedup:.1f}x;hedges={r.hedges};lost={r.lost};"
+         f"dup={r.duplicated};counters_exact={r.counters_exact}")
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline as rl
     from repro.perf.roofline import render
@@ -147,6 +159,7 @@ def bench_kernels() -> None:
 
 BENCHES = {
     "batch": bench_batch,
+    "fleet": bench_fleet,
     "kernels": bench_kernels,
     "table3": bench_table3,
     "table4": bench_table4,

@@ -34,8 +34,10 @@ server.fleet.replicas[1].fail_rate = 1.0
 for qid in test_idx[:40]:
     server.handle(Request(prompt="", qid=qid, slo=SLO()))
 print("system after faults:", server.system_state())
-print("(hedges > 0 -> stragglers were tail-hedged; failovers > 0 -> dead "
-      "replica evicted, requests retried)")
+print("(hedges > 0 -> stragglers got a real duplicate on a second replica; "
+      "failovers > 0 -> dead replica evicted, requests retried; requeues "
+      "count in-flight work handed back on eviction, cancelled the losing "
+      "duplicates)")
 
 print("\n=== elastic scale-out ===")
 server.fleet.scale_to(5)

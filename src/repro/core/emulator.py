@@ -81,8 +81,9 @@ class Emulator:
                 st = hit
             else:
                 self._cache_misses += 1
-                st = fn(q, choice, st)
-                self._stage_cache[prefix] = st
+                # atomic setdefault: one canonical state per prefix even if
+                # the cache is shared with concurrent readers
+                st = self._stage_cache.setdefault(prefix, fn(q, choice, st))
         st = ex.run_model(q, path.model, st)
         acc = ex.judge(q, path, st)
         return acc, st.latency_s, st.cost_usd

@@ -56,6 +56,10 @@ class PipelineExecutor:
         # in repro.core.retrieval is for larger stores (covered by tests)
         self.store = VectorStore(domain.chunk_embeddings, n_clusters=0, seed=seed)
         self._helper = MODEL_CATALOG[HELPER_MODEL]
+        # All three memos are read/written lock-free from concurrent fleet
+        # workers: entries are deterministic functions of their key, so a
+        # race at worst duplicates a computation, and the atomic
+        # dict.setdefault keeps a single canonical entry per key.
         self._hyde_cache: dict[int, np.ndarray] = {}
         self._sb_cache: dict[int, np.ndarray] = {}
         # search memo: (qid, stepback?, hyde?, k) fully determines the query
@@ -97,8 +101,9 @@ class PipelineExecutor:
             # key entities (real re-embedding of the expanded text)
             vec = self._sb_cache.get(q.qid)
             if vec is None:
-                vec = embed_text(q.text + " " + q.text + " clarify context specification")
-                self._sb_cache[q.qid] = vec
+                vec = self._sb_cache.setdefault(
+                    q.qid,
+                    embed_text(q.text + " " + q.text + " clarify context specification"))
             return vec
         return self.domain.query_embeddings[q.qid]
 
@@ -114,11 +119,12 @@ class PipelineExecutor:
             if hyde:
                 hypo = self._hyde_cache.get(q.qid)
                 if hypo is None:
-                    hypo = embed_text(q.text + " " + q.reference.split("fact-")[0])
-                    self._hyde_cache[q.qid] = hypo
+                    hypo = self._hyde_cache.setdefault(
+                        q.qid,
+                        embed_text(q.text + " " + q.reference.split("fact-")[0]))
                 vec = vec + 0.5 * hypo
-            res = self.store.search(vec.astype(np.float32), k)
-            self._search_cache[key] = res
+            res = self._search_cache.setdefault(
+                key, self.store.search(vec.astype(np.float32), k))
         return res
 
     def run_retrieval(self, q: Query, choice: ComponentChoice, st: StageState) -> StageState:
@@ -366,25 +372,32 @@ class BatchedPipelineExecutor:
             slots1 = np.unique(self.path_s1[js])
             slots2 = np.unique(self.path_s2[js])
             slots3, inv = np.unique(self.path_s3[js], return_inverse=True)
+        # writes go through the atomic dict.setdefault so a concurrently
+        # shared prefix cache keeps one canonical state per key (a racing
+        # thread recomputes the same deterministic state and discards it);
+        # `prev is st` keeps the miss count exact in the single-thread case
         for s in slots1:
             key = root + self.s1_suffix[s]
-            if key not in cache:
+            if cache.get(key) is None:
                 if st0 is None:
                     st0 = ex.initial_state(q)
-                cache[key] = ex.run_qproc(q, self.s1_choice[s], st0)
-                n_new += 1
+                st = ex.run_qproc(q, self.s1_choice[s], st0)
+                if cache.setdefault(key, st) is st:
+                    n_new += 1
         for s in slots2:
             key = root + self.s2_suffix[s]
-            if key not in cache:
+            if cache.get(key) is None:
                 parent = cache[root + self.s1_suffix[self.s2_parent[s]]]
-                cache[key] = ex.run_retrieval(q, self.s2_choice[s], parent)
-                n_new += 1
+                st = ex.run_retrieval(q, self.s2_choice[s], parent)
+                if cache.setdefault(key, st) is st:
+                    n_new += 1
         for s in slots3:
             key = root + self.s3_suffix[s]
-            if key not in cache:
+            if cache.get(key) is None:
                 parent = cache[root + self.s2_suffix[self.s3_parent[s]]]
-                cache[key] = ex.run_cproc(q, self.s3_choice[s], parent)
-                n_new += 1
+                st = ex.run_cproc(q, self.s3_choice[s], parent)
+                if cache.setdefault(key, st) is st:
+                    n_new += 1
         states = [cache[root + self.s3_suffix[s]] for s in slots3]
         return states, inv, n_new
 

@@ -33,9 +33,15 @@ class Decision:
     path: Path
     set_id: int
     used_fallback: bool
+    # per-query selection overhead: full wall-clock for `select`, the
+    # amortized total/B share for `select_batch`.  This is the figure
+    # `Response.selection_overhead_s` carries.
     overhead_s: float
     expected_latency_s: float
     expected_cost_usd: float
+    # full wall-clock of the selection pass that produced this decision
+    # (== overhead_s for `select`, == B * overhead_s for `select_batch`)
+    batch_overhead_s: float = 0.0
 
 
 class RuntimePathSelector:
@@ -102,8 +108,10 @@ class RuntimePathSelector:
         if not feasible.any():
             path = self._fallback(set_id, slo)
             j = self._path_index[path]
-            return Decision(path, set_id, True, time.perf_counter() - t0,
-                            float(self.path_latency[j]), float(self.path_cost[j]))
+            dt = time.perf_counter() - t0
+            return Decision(path, set_id, True, dt,
+                            float(self.path_latency[j]), float(self.path_cost[j]),
+                            batch_overhead_s=dt)
 
         # Eq. 14: sum over k nearest training queries of w_q * A(q, P_q) * I[P_q == P]
         k = min(self.knn, sims.shape[0])
@@ -115,8 +123,10 @@ class RuntimePathSelector:
         scores = scores + 1e-3 * self.path_mean_acc
         scores[~feasible] = -np.inf
         j = int(np.argmax(scores))
-        return Decision(self.table.paths[j], set_id, False, time.perf_counter() - t0,
-                        float(self.path_latency[j]), float(self.path_cost[j]))
+        dt = time.perf_counter() - t0
+        return Decision(self.table.paths[j], set_id, False, dt,
+                        float(self.path_latency[j]), float(self.path_cost[j]),
+                        batch_overhead_s=dt)
 
     def select_batch(self, query_embs: np.ndarray, slos) -> list[Decision]:
         """Vectorized Algorithm 3 over a batch of queries.
@@ -171,10 +181,12 @@ class RuntimePathSelector:
             else:
                 path = self._fallback(int(set_ids[b]), slo_list[b])
                 picks.append((self._path_index[path], True))
-        overhead = (time.perf_counter() - t0) / max(B, 1)
+        total_overhead = time.perf_counter() - t0
+        overhead = total_overhead / max(B, 1)  # amortized per-query share
         return [Decision(self.table.paths[j], int(set_ids[b]), fell_back,
                          overhead, float(self.path_latency[j]),
-                         float(self.path_cost[j]))
+                         float(self.path_cost[j]),
+                         batch_overhead_s=total_overhead)
                 for b, (j, fell_back) in enumerate(picks)]
 
     def _fallback(self, set_id: int, slo: SLO) -> Path:

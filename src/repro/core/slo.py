@@ -1,7 +1,8 @@
 """Service Level Objectives (paper Eq. 4) and violation accounting."""
 from __future__ import annotations
 
-from dataclasses import dataclass
+import threading
+from dataclasses import dataclass, field
 
 
 @dataclass(frozen=True)
@@ -18,13 +19,18 @@ class SLOTracker:
     total: int = 0
     latency_violations: int = 0
     cost_violations: int = 0
+    # concurrent handlers record through the same tracker; the lock keeps
+    # the read-modify-write counters exact
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def record(self, slo: SLO, latency_s: float, cost_usd: float) -> None:
-        self.total += 1
-        if latency_s > slo.max_latency_s:
-            self.latency_violations += 1
-        if cost_usd > slo.max_cost_usd:
-            self.cost_violations += 1
+        with self._lock:
+            self.total += 1
+            if latency_s > slo.max_latency_s:
+                self.latency_violations += 1
+            if cost_usd > slo.max_cost_usd:
+                self.cost_violations += 1
 
     @property
     def violation_rate(self) -> float:

@@ -1,4 +1,4 @@
-"""Serving fleet: replicas, health, hedging, elastic scaling.
+"""Serving fleet: replicas, health, real hedging, elastic scaling.
 
 On a real multi-pod deployment each ``Replica`` wraps a jitted serve step on
 a mesh slice; here replicas execute the ECO-LLM pipeline (modeled latency) so
@@ -6,20 +6,44 @@ the scheduling logic — the part that must survive thousands of nodes — is
 fully exercised:
 
   * heartbeat-based health: replicas that miss ``max_missed`` beats are
-    evicted and their in-flight requests re-queued (node-failure handling);
-  * hedged requests: if a call exceeds the replica's rolling p95, a duplicate
-    fires on a second replica and the loser is cancelled (straggler
-    mitigation, Dean & Barroso tail-at-scale style);
-  * elastic scaling: ``scale_to(n)`` adds/removes replicas; the dispatcher
-    only routes to live members, so resizes are hitless.
+    evicted and their in-flight requests re-queued on surviving replicas
+    (node-failure handling).  Failure/heartbeat eviction never drains the
+    fleet below one live replica, so a burst of concurrent faults on the
+    last member cannot evict it to zero.
+  * hedged requests: once a dispatched call has been running longer than the
+    hedge deadline — ``hedge_mult`` x the best rolling wall-clock p95 among
+    candidate backup replicas, floored at ``hedge_floor_s`` — a duplicate
+    fires on a second replica; the first completion wins and the loser is
+    cancelled (dropped from the queue if it never started, discarded on
+    arrival otherwise; Dean & Barroso tail-at-scale style).
+  * elastic scaling: ``scale_to(n)`` adds/removes replicas; drained members
+    hand their queued and in-flight work back to the dispatcher, so resizes
+    are hitless.
+
+``submit_many`` fans a batch out across live replicas: each replica owns a
+work deque served by up to ``per_replica_concurrency`` pool workers that
+drain their own deque first and steal the tail of the longest other deque
+when idle, so batch wall-clock tracks the slowest replica instead of the sum
+over all calls.  With ``max_workers=1`` the fleet degrades to the
+deterministic sequential dispatcher (bit-for-bit the pre-threaded behaviour,
+including its simulated post-hoc hedge accounting) — the mode the parity
+tests pin.
+
+Accounting is exact under concurrency: every hedge/failover/requeue/cancel
+increments the fleet counter and the per-flight counter inside the same
+critical section, so ``sum(meta[...]) == fleet counter`` always holds.
 """
 from __future__ import annotations
 
 import random
 import threading
 import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Optional
+
+LAT_WINDOW = 512  # bounded stats window: unbounded lists leaked memory
 
 
 @dataclass
@@ -27,13 +51,44 @@ class ReplicaStats:
     calls: int = 0
     hedges: int = 0
     failures: int = 0
-    latencies: list = field(default_factory=list)
+    # rolling windows; `latencies` keeps the modeled (nominal) latency the
+    # old list carried, `wall_latencies` the real wall-clock used for hedging
+    latencies: deque = field(default_factory=lambda: deque(maxlen=LAT_WINDOW))
+    wall_latencies: deque = field(
+        default_factory=lambda: deque(maxlen=LAT_WINDOW))
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def record_success(self, lat: float, wall: float) -> None:
+        with self._lock:
+            self.calls += 1
+            self.latencies.append(lat)
+            self.wall_latencies.append(wall)
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self.failures += 1
+
+    def record_hedge(self) -> None:
+        with self._lock:
+            self.hedges += 1
+
+    @staticmethod
+    def _p95(xs: list, default: float) -> float:
+        if len(xs) < 8:
+            return default
+        xs = sorted(xs[-256:])
+        return xs[int(0.95 * (len(xs) - 1))]
 
     def p95(self, default: float = 0.5) -> float:
-        if len(self.latencies) < 8:
-            return default
-        xs = sorted(self.latencies[-256:])
-        return xs[int(0.95 * (len(xs) - 1))]
+        with self._lock:
+            xs = list(self.latencies)
+        return self._p95(xs, default)
+
+    def p95_wall(self, default: float = 0.5) -> float:
+        with self._lock:
+            xs = list(self.wall_latencies)
+        return self._p95(xs, default)
 
 
 @dataclass
@@ -51,67 +106,215 @@ class Replica:
     def call(self, request, rng: random.Random):
         t0 = time.perf_counter()
         if rng.random() < self.fail_rate:
-            self.stats.failures += 1
+            self.stats.record_failure()
             raise RuntimeError(f"replica {self.rid} failed")
         extra = self.straggle_s if rng.random() < self.straggle_rate else 0.0
         if extra:
             time.sleep(min(extra, 0.05))  # bounded real sleep in tests
         out = self.execute(request)
-        lat = time.perf_counter() - t0 + extra
-        self.stats.calls += 1
-        self.stats.latencies.append(lat)
+        wall = time.perf_counter() - t0
+        lat = wall + extra
+        self.stats.record_success(lat, wall)
         return out, lat
 
 
+class _Flight:
+    """One logical request tracked through dispatch, failover, hedging and
+    eviction re-queues.  ``lock`` guards all mutable state; the completion
+    flag flips exactly once (first finisher wins), so a request can neither
+    be lost nor double-delivered."""
+
+    __slots__ = ("request", "hedge_allowed", "lock", "done", "result", "meta",
+                 "error", "failures", "hedges", "requeues",
+                 "tried_failed", "active", "completed", "claims")
+
+    def __init__(self, request, hedge_allowed: bool):
+        self.request = request
+        self.hedge_allowed = hedge_allowed
+        self.lock = threading.Lock()
+        self.done = threading.Event()
+        self.result = None
+        self.meta: Optional[dict] = None
+        self.error: Optional[Exception] = None
+        self.failures = 0        # executions that raised
+        self.hedges = 0          # hedge duplicates dispatched
+        self.requeues = 0        # eviction-driven duplicates dispatched
+        self.tried_failed: set[int] = set()   # rids that failed this flight
+        self.active: dict[int, float] = {}    # rid -> start wall time
+        self.completed = False
+        # copies popped from a queue but not yet registered as executing;
+        # covers the hand-off window so the orphan rescue can't double-
+        # dispatch a flight that a worker is about to start (guarded by
+        # the fleet lock)
+        self.claims = 0
+
+
 class ReplicaFleet:
+    """Elastic replica pool with a concurrent, hedging dispatcher.
+
+    Lock discipline: ``self._lock`` (fleet state: replicas, queues, counters)
+    is always acquired *before* a flight's ``lock``; never the reverse.
+    """
+
     def __init__(self, make_replica: Callable[[int], Replica], n: int = 2,
-                 max_missed: int = 3, seed: int = 0):
+                 max_missed: int = 3, seed: int = 0,
+                 max_workers: Optional[int] = None,
+                 per_replica_concurrency: int = 2, max_attempts: int = 4,
+                 max_hedges: int = 1, hedge_floor_s: float = 0.02,
+                 hedge_mult: float = 2.0, hedge_cold_s: float = 0.5):
         self._make = make_replica
         self.replicas: dict[int, Replica] = {}
         self._next_id = 0
         self.max_missed = max_missed
         self.rng = random.Random(seed)
         self._lock = threading.Lock()
+        self.max_workers = (max_workers if max_workers is not None
+                            else min(16, max(4, 2 * n)))
+        self.per_replica_concurrency = per_replica_concurrency
+        self.max_attempts = max_attempts
+        self.max_hedges = max_hedges
+        self.hedge_floor_s = hedge_floor_s
+        self.hedge_mult = hedge_mult
+        self.hedge_cold_s = hedge_cold_s
+        self._tick_s = 0.002  # dispatcher monitor granularity
+
         self.hedge_count = 0
         self.failover_count = 0
+        self.requeue_count = 0
+        self.cancelled_count = 0
+
+        # `replicas` is the full registry and retains evicted members for
+        # introspection (their stats windows are bounded); the hot paths
+        # below only ever iterate `_live`, and a dead rid's dispatcher state
+        # is garbage-collected once its queue, workers and in-flight drain
+        self._live: dict[int, Replica] = {}
+        self._queues: dict[int, deque] = {}
+        self._workers: dict[int, int] = {}          # rid -> active workers
+        self._active_by_rid: dict[int, set] = {}    # rid -> executing flights
+        self._wake = threading.Event()
+        self._pool = (ThreadPoolExecutor(
+            max_workers=self.max_workers,
+            thread_name_prefix="fleet") if self.max_workers > 1 else None)
         self.scale_to(n)
 
     # -- elasticity ----------------------------------------------------------
 
     def scale_to(self, n: int) -> None:
         with self._lock:
-            live = [r for r in self.replicas.values() if r.healthy]
+            live = list(self._live.values())
             while len(live) < n:
                 r = self._make(self._next_id)
                 self.replicas[r.rid] = r
+                self._live[r.rid] = r
+                self._queues.setdefault(r.rid, deque())
+                self._workers.setdefault(r.rid, 0)
+                self._active_by_rid.setdefault(r.rid, set())
                 self._next_id += 1
                 live.append(r)
             while len(live) > n:
                 victim = live.pop()
-                victim.healthy = False  # drained; dispatcher skips it
+                # drain: operator intent, so the last-replica guard is off
+                self._evict_locked(victim, force=True)
 
     def live(self) -> list[Replica]:
-        return [r for r in self.replicas.values() if r.healthy]
+        with self._lock:
+            return list(self._live.values())
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())
+
+    def in_flight(self) -> int:
+        with self._lock:
+            return sum(len(s) for s in self._active_by_rid.values())
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
 
     # -- health ---------------------------------------------------------------
 
     def heartbeat(self, responding: Optional[set[int]] = None) -> None:
-        """One monitor tick; replicas not in ``responding`` accrue a miss."""
-        for r in self.live():
-            if responding is not None and r.rid not in responding:
-                r.missed_beats += 1
-                if r.missed_beats >= self.max_missed:
-                    r.healthy = False
-            else:
-                r.missed_beats = 0
+        """One monitor tick; replicas not in ``responding`` accrue a miss.
+        Eviction is atomic (under the fleet lock) and re-queues the evicted
+        member's outstanding work onto survivors."""
+        with self._lock:
+            for r in list(self._live.values()):
+                if responding is not None and r.rid not in responding:
+                    r.missed_beats += 1
+                    if r.missed_beats >= self.max_missed:
+                        self._evict_locked(r)
+                else:
+                    r.missed_beats = 0
+
+    def _evict_locked(self, r: Optional[Replica], force: bool = False) -> bool:
+        """Mark ``r`` unhealthy and hand its queued + in-flight work back to
+        the dispatcher.  Refuses to evict the last live replica unless
+        ``force`` (scale-down drain).  Caller holds ``self._lock``."""
+        if r is None or not r.healthy:
+            return False
+        if not force and len(self._live) <= 1:
+            return False
+        r.healthy = False
+        self._live.pop(r.rid, None)
+        q = self._queues.get(r.rid)
+        stranded = list(q) if q else []
+        if q:
+            q.clear()
+        # duplicate in-flight executions elsewhere; the original thread may
+        # still land, in which case first-completion-wins settles it
+        for f in list(self._active_by_rid.get(r.rid, ())):
+            with f.lock:
+                if f.completed or r.rid not in f.active:
+                    continue
+                f.requeues += 1
+            self.requeue_count += 1
+            self._requeue_locked(f, exclude={r.rid} | set(f.tried_failed),
+                                 priority=True)
+        for f in stranded:
+            self._requeue_locked(f, exclude={r.rid}, priority=False)
+        self._gc_rid_locked(r.rid)
+        return True
+
+    def _gc_rid_locked(self, rid: int) -> None:
+        """Drop a dead rid's dispatcher state once its queue, workers and
+        in-flight set have drained, so churn (evict + re-provision) doesn't
+        grow the hot-path dicts without bound.  ``self.replicas`` keeps the
+        evicted Replica itself as an introspection tombstone (its stats
+        windows are bounded)."""
+        if (rid in self._live or self._queues.get(rid)
+                or self._active_by_rid.get(rid)
+                or self._workers.get(rid, 0) > 0):
+            return
+        self._queues.pop(rid, None)
+        self._workers.pop(rid, None)
+        self._active_by_rid.pop(rid, None)
 
     # -- dispatch with hedging -------------------------------------------------
 
     def submit(self, request, hedge: bool = True):
         """Run a request with failover + tail hedging. Returns (result, meta)."""
+        if self._pool is None:
+            return self._submit_sequential(request, hedge)
+        return self._run_flights([_Flight(request, hedge)], hedge)[0]
+
+    def submit_many(self, requests, hedge: bool = True):
+        """Dispatch a batch concurrently across the fleet; results keep the
+        input order.  ``max_workers=1`` falls back to the deterministic
+        sequential loop."""
+        requests = list(requests)
+        if self._pool is None:
+            return [self._submit_sequential(r, hedge) for r in requests]
+        return self._run_flights([_Flight(r, hedge) for r in requests], hedge)
+
+    # -- sequential reference dispatcher (deterministic mode) ----------------
+
+    def _submit_sequential(self, request, hedge: bool):
+        """Pre-threaded behaviour, bit-for-bit: same RNG draw order, same
+        simulated hedge accounting (min with the backup's rolling p95)."""
         attempts = 0
         last_err: Optional[Exception] = None
-        while attempts < 4:
+        while attempts < self.max_attempts:
             live = self.live()
             if not live:
                 raise RuntimeError("no live replicas")
@@ -119,27 +322,251 @@ class ReplicaFleet:
             try:
                 out, lat = primary.call(request, self.rng)
             except Exception as e:  # noqa: BLE001 — failover path
-                self.failover_count += 1
-                primary.healthy = len(live) == 1  # evict unless it's the last
+                with self._lock:
+                    self.failover_count += 1
+                    self._evict_locked(primary)  # no-op on the last replica
                 last_err = e
                 attempts += 1
                 continue
-            # hedging: if this call blew past the rolling p95, a production
-            # system would have already fired the duplicate; account for it
-            # and take the faster of (observed, second replica's p95).
             if hedge and len(live) > 1 and lat > 2.0 * primary.stats.p95():
-                backup = self.rng.choice([r for r in live if r.rid != primary.rid])
-                self.hedge_count += 1
-                primary.stats.hedges += 1
+                backup = self.rng.choice(
+                    [r for r in live if r.rid != primary.rid])
+                with self._lock:
+                    self.hedge_count += 1
+                primary.stats.record_hedge()
                 lat = min(lat, backup.stats.p95(default=lat))
-            return out, {"replica": primary.rid, "latency_s": lat, "attempts": attempts + 1}
+            return out, {"replica": primary.rid, "latency_s": lat,
+                         "attempts": attempts + 1}
         raise RuntimeError(f"request failed after retries: {last_err!r}")
 
-    def submit_many(self, requests, hedge: bool = True):
-        """Dispatch a batch of requests across the fleet.
+    # -- concurrent dispatcher ----------------------------------------------
 
-        Each request keeps the full failover + hedging treatment of
-        ``submit``; batching exists so callers (``EcoLLMServer.handle_batch``)
-        have a single dispatch point to evolve toward parallel replicas.
-        """
-        return [self.submit(r, hedge=hedge) for r in requests]
+    def _run_flights(self, flights: list[_Flight], hedge: bool):
+        with self._lock:
+            if not self._live:
+                raise RuntimeError("no live replicas")
+            for f in flights:
+                self._enqueue_locked(f)
+        pending = list(flights)
+        while pending:
+            pending = [f for f in pending if not f.done.is_set()]
+            if not pending:
+                break
+            self._hedge_and_kick(pending, hedge)
+            self._wake.clear()
+            self._wake.wait(self._tick_s)
+        out = []
+        for f in flights:
+            if f.error is not None:
+                raise RuntimeError(f"request failed after retries: {f.error!r}")
+            out.append((f.result, f.meta))
+        return out
+
+    def _pick_target_locked(self, exclude) -> Optional[Replica]:
+        cands = [r for r in self._live.values() if r.rid not in exclude]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (
+            len(self._queues[r.rid]) + len(self._active_by_rid[r.rid]),
+            self.rng.random()))
+
+    def _enqueue_locked(self, f: _Flight, priority: bool = False,
+                        exclude=frozenset(), hard_exclude=frozenset()) -> None:
+        """``exclude`` is advisory (dropped if it would leave no target);
+        ``hard_exclude`` holds replicas already executing this flight — a
+        duplicate there would corrupt the rid-keyed active bookkeeping, so
+        it is never dropped.  With no target at all the flight errors out
+        unless a copy is still running somewhere (that copy can still win)."""
+        target = self._pick_target_locked(exclude | hard_exclude)
+        if target is None and exclude:
+            target = self._pick_target_locked(hard_exclude)
+        if target is None:
+            errored = False
+            with f.lock:
+                if not f.completed and not f.active:
+                    f.completed = True
+                    f.error = RuntimeError("no live replicas")
+                    errored = True
+            if errored:
+                f.done.set()
+            return
+        q = self._queues[target.rid]
+        (q.appendleft if priority else q.append)(f)
+        self._ensure_worker_locked(target.rid)
+
+    def _requeue_locked(self, f: _Flight, exclude, priority: bool) -> None:
+        with f.lock:
+            if f.completed:
+                return
+            hard = set(f.active)
+        self._enqueue_locked(f, priority=priority,
+                             exclude=set(exclude) - hard, hard_exclude=hard)
+
+    def _ensure_worker_locked(self, rid: int) -> None:
+        if (self._pool is None
+                or self._workers.get(rid, 0) >= self.per_replica_concurrency):
+            return
+        self._workers[rid] = self._workers.get(rid, 0) + 1
+        self._pool.submit(self._worker_loop, rid)
+
+    def _worker_loop(self, rid: int) -> None:
+        try:
+            while True:
+                flight = None
+                with self._lock:
+                    if rid not in self._live:
+                        break
+                    q = self._queues.get(rid)
+                    if q:
+                        flight = q.popleft()
+                    else:
+                        flight = self._steal_locked(rid)
+                    if flight is None:
+                        break
+                    flight.claims += 1
+                self._execute_one(rid, flight)
+        finally:
+            with self._lock:
+                self._workers[rid] = self._workers.get(rid, 1) - 1
+                self._gc_rid_locked(rid)
+            self._wake.set()
+
+    def _steal_locked(self, rid: int) -> Optional[_Flight]:
+        """Work stealing: take the tail of the longest other live deque, if
+        this replica is eligible to run it."""
+        donor_q, best = None, 0
+        for x in self._live.values():
+            if x.rid == rid:
+                continue
+            q = self._queues.get(x.rid)
+            if q and len(q) > best:
+                best, donor_q = len(q), q
+        if donor_q is None:
+            return None
+        f = donor_q[-1]
+        with f.lock:
+            ok = (not f.completed and rid not in f.active
+                  and rid not in f.tried_failed)
+        if not ok:
+            return None
+        donor_q.pop()
+        return f
+
+    def _execute_one(self, rid: int, f: _Flight) -> None:
+        rep = None
+        with self._lock:
+            f.claims -= 1  # hand-off ends here, atomically with the outcome
+            r = self._live.get(rid)
+            if r is not None:
+                with f.lock:
+                    if f.completed:
+                        self.cancelled_count += 1  # cancelled before start
+                        return
+                    f.active[rid] = time.perf_counter()
+                self._active_by_rid[rid].add(f)
+                rep = r
+            else:
+                # replica evicted between enqueue and execution
+                self._requeue_locked(f, exclude={rid}, priority=True)
+        if rep is None:
+            return
+        try:
+            out, lat = rep.call(f.request, self.rng)
+            err = None
+        except Exception as e:  # noqa: BLE001 — failover path
+            err, out, lat = e, None, 0.0
+        if err is None:
+            winner = False
+            with self._lock:
+                self._active_by_rid.get(rid, set()).discard(f)
+                with f.lock:
+                    f.active.pop(rid, None)
+                    if not f.completed:
+                        winner = True
+                        f.completed = True
+                        # "attempts" = retries + 1, mirroring the sequential
+                        # dispatcher (hedge/requeue duplicates not included
+                        # — those are under their own keys)
+                        f.meta = {"replica": rid, "latency_s": lat,
+                                  "attempts": f.failures + 1,
+                                  "hedges": f.hedges, "requeues": f.requeues}
+                        f.result = out
+                if not winner:
+                    self.cancelled_count += 1  # loser of a hedge/requeue race
+                self._gc_rid_locked(rid)
+            if winner:
+                f.done.set()
+            self._wake.set()
+            return
+        give_up = False
+        with self._lock:
+            self.failover_count += 1
+            self._active_by_rid.get(rid, set()).discard(f)
+            with f.lock:
+                f.active.pop(rid, None)
+                f.failures += 1
+                f.tried_failed.add(rid)
+                if not f.completed and f.failures >= self.max_attempts:
+                    f.completed = True
+                    f.error = err
+                    give_up = True
+                retry = not f.completed
+            self._evict_locked(rep)  # atomic: never drains the last replica
+            self._gc_rid_locked(rid)
+            if retry:
+                self._requeue_locked(f, exclude=set(f.tried_failed),
+                                     priority=True)
+        if give_up:
+            f.done.set()
+        self._wake.set()
+
+    def _hedge_deadline_for(self, exclude) -> Optional[float]:
+        with self._lock:
+            cands = [r for r in self._live.values() if r.rid not in exclude]
+        if not cands:
+            return None
+        p95 = min(r.stats.p95_wall(default=self.hedge_cold_s) for r in cands)
+        return max(self.hedge_floor_s, self.hedge_mult * p95)
+
+    def _hedge_and_kick(self, pending: list[_Flight], hedge: bool) -> None:
+        """Monitor pass: fire hedges whose deadline passed, make sure every
+        non-empty queue has a worker, rescue orphaned flights."""
+        now = time.perf_counter()
+        to_hedge = []
+        if hedge:
+            for f in pending:
+                with f.lock:
+                    if (f.completed or not f.hedge_allowed
+                            or f.hedges >= self.max_hedges or not f.active):
+                        continue
+                    rid0, t0 = min(f.active.items(), key=lambda kv: kv[1])
+                    exclude = set(f.active) | set(f.tried_failed)
+                deadline = self._hedge_deadline_for(exclude)
+                if deadline is not None and (now - t0) >= deadline:
+                    to_hedge.append((f, rid0))
+        with self._lock:
+            for f, rid0 in to_hedge:
+                fired = False
+                with f.lock:
+                    if not f.completed and f.hedges < self.max_hedges:
+                        f.hedges += 1
+                        fired = True
+                if fired:
+                    self.hedge_count += 1
+                    rep = self.replicas.get(rid0)
+                    if rep is not None:
+                        rep.stats.record_hedge()
+                    self._requeue_locked(f, exclude=set(f.tried_failed),
+                                         priority=True)
+            queued = set()
+            for rid in self._live:
+                q = self._queues.get(rid)
+                if q:
+                    self._ensure_worker_locked(rid)
+                    queued.update(id(f) for f in q)
+            for f in pending:
+                with f.lock:
+                    orphan = (not f.completed and not f.active
+                              and id(f) not in queued)
+                if orphan and f.claims == 0:
+                    self._enqueue_locked(f, priority=True)

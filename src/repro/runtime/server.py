@@ -8,7 +8,9 @@ system state reporting.
 """
 from __future__ import annotations
 
+import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -37,6 +39,9 @@ class Response:
     latency_s: float
     cost_usd: float
     path_key: str
+    # amortized per-query selection overhead (Decision.overhead_s).  For
+    # batch-selected responses the full selection-pass wall-clock is in
+    # meta["batch_overhead_s"] (Decision.batch_overhead_s).
     selection_overhead_s: float
     slo_ok: bool
     replica: int
@@ -46,28 +51,54 @@ class Response:
 class EcoLLMServer:
     """Binds a trained RPS to a domain executor behind an elastic fleet."""
 
+    EMBED_CACHE_MAX = 1024
+
     def __init__(self, domain: DomainData, rps: RuntimePathSelector,
-                 executor: PipelineExecutor, n_replicas: int = 2, seed: int = 0):
+                 executor: PipelineExecutor, n_replicas: int = 2, seed: int = 0,
+                 max_workers: Optional[int] = None):
         self.domain = domain
         self.rps = rps
         self.executor = executor
         self.tracker = SLOTracker()
+        # LRU memo for open-world prompt embeddings (same pattern as the
+        # executor's retrieval memoization); guarded for concurrent handles
+        self._embed_lock = threading.Lock()
+        self._embed_cache: OrderedDict[str, np.ndarray] = OrderedDict()
+        self.embed_cache_hits = 0
+        self.embed_cache_misses = 0
 
         def make_replica(rid: int) -> Replica:
             return Replica(rid=rid, execute=self._execute)
 
-        self.fleet = ReplicaFleet(make_replica, n=n_replicas, seed=seed)
+        self.fleet = ReplicaFleet(make_replica, n=n_replicas, seed=seed,
+                                  max_workers=max_workers)
 
     def _execute(self, job):
         query, path = job
         return self.executor.run(query, path)
 
+    def _embed_prompt(self, prompt: str) -> np.ndarray:
+        with self._embed_lock:
+            emb = self._embed_cache.get(prompt)
+            if emb is not None:
+                self._embed_cache.move_to_end(prompt)
+                self.embed_cache_hits += 1
+                return emb
+        emb = embed_text(prompt)
+        with self._embed_lock:
+            self.embed_cache_misses += 1
+            emb = self._embed_cache.setdefault(prompt, emb)
+            self._embed_cache.move_to_end(prompt)
+            while len(self._embed_cache) > self.EMBED_CACHE_MAX:
+                self._embed_cache.popitem(last=False)
+        return emb
+
     def _resolve_query(self, req: Request):
         if req.qid is not None:
             return self.domain.queries[req.qid], self.domain.query_embeddings[req.qid]
-        # open-world query: embed the raw prompt; judge against the
-        # closest known query's metadata (OOD path)
-        emb = embed_text(req.prompt)
+        # open-world query: embed the raw prompt (memoized for repeats);
+        # judge against the closest known query's metadata (OOD path)
+        emb = self._embed_prompt(req.prompt)
         sims = self.domain.query_embeddings @ emb
         return self.domain.queries[int(np.argmax(sims))], emb
 
@@ -84,7 +115,10 @@ class EcoLLMServer:
             slo_ok=req.slo.ok(lat, cost),
             replica=meta["replica"],
             meta={"set_id": decision.set_id, "fallback": decision.used_fallback,
-                  "attempts": meta["attempts"]},
+                  "attempts": meta["attempts"],
+                  "batch_overhead_s": decision.batch_overhead_s,
+                  "hedges": meta.get("hedges", 0),
+                  "requeues": meta.get("requeues", 0)},
         )
 
     def handle(self, req: Request) -> Response:
@@ -112,6 +146,12 @@ class EcoLLMServer:
             "replicas": len(self.fleet.live()),
             "hedges": self.fleet.hedge_count,
             "failovers": self.fleet.failover_count,
+            "requeues": self.fleet.requeue_count,
+            "cancelled": self.fleet.cancelled_count,
+            "queue_depth": self.fleet.queue_depth(),
+            "in_flight": self.fleet.in_flight(),
             "slo_violation_rate": self.tracker.violation_rate,
             "requests": self.tracker.total,
+            "embed_cache": {"hits": self.embed_cache_hits,
+                            "misses": self.embed_cache_misses},
         }

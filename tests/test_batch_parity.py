@@ -99,13 +99,41 @@ def test_select_batch_matches_select(domain, space):
             assert s.used_fallback == b.used_fallback
             assert s.expected_latency_s == b.expected_latency_s
             assert s.expected_cost_usd == b.expected_cost_usd
-    # mixed per-query SLOs in one batch
+    # mixed per-query SLOs in one batch, where some queries fall back (the
+    # impossible SLO) and others don't — both branches must be exercised
     mixed = [slos[i % len(slos)] for i in range(len(test_idx))]
     singles = [rps.select(domain.query_embeddings[q], s)
                for q, s in zip(test_idx, mixed)]
     batch = rps.select_batch(domain.query_embeddings[test_idx], mixed)
+    fallbacks = {b.used_fallback for b in batch}
+    assert fallbacks == {True, False}
     for s, b in zip(singles, batch):
         assert (s.path.key, s.used_fallback) == (b.path.key, b.used_fallback)
+
+
+def test_decision_overhead_reports_both_amortized_and_batch(domain, space):
+    """`overhead_s` is the per-query (amortized) figure that
+    `Response.selection_overhead_s` carries; `batch_overhead_s` is the full
+    selection-pass wall-clock (== overhead_s for single `select`)."""
+    train_idx, test_idx = train_test_split(domain, 0.3)
+    emu = Emulator(domain, space, seed=3)
+    table = emu.explore(train_idx, budget=3.0, lam=0)
+    cca = critical_component_analysis(table, lam=0)
+    emb = domain.query_embeddings[train_idx]
+    dsqe = train_dsqe(emb, cca.set_ids, len(cca.set_vocab), steps=120, seed=3)
+    rps = RuntimePathSelector(space, dsqe, cca, table, emb, lam=0)
+
+    single = rps.select(domain.query_embeddings[test_idx[0]], SLO())
+    assert single.batch_overhead_s == single.overhead_s > 0.0
+
+    B = len(test_idx)
+    batch = rps.select_batch(domain.query_embeddings[test_idx], SLO())
+    totals = {d.batch_overhead_s for d in batch}
+    assert len(totals) == 1  # one selection pass, one wall-clock
+    total = totals.pop()
+    for d in batch:
+        assert d.overhead_s == pytest.approx(total / B)
+        assert d.overhead_s < d.batch_overhead_s
 
 
 def test_handle_batch_matches_handle(domain, space):

@@ -97,6 +97,21 @@ def test_fleet_hedging_counts_stragglers():
     assert fleet.hedge_count > 0  # tail requests were hedged
 
 
+def test_replica_stats_window_stays_bounded():
+    """Regression: ReplicaStats.latencies grew without bound under sustained
+    traffic (memory leak); the rolling window caps it."""
+    import random
+
+    r = Replica(rid=0, execute=lambda job: "ok")
+    rng = random.Random(0)
+    for _ in range(10_000):
+        r.call("job", rng)
+    assert r.stats.calls == 10_000
+    assert len(r.stats.latencies) <= 512
+    assert len(r.stats.wall_latencies) <= 512
+    assert 0.0 <= r.stats.p95() < 1.0  # p95 still works on the window
+
+
 def test_fleet_elastic_scaling():
     fleet = ReplicaFleet(lambda rid: Replica(rid=rid, execute=lambda j: "ok"), n=2)
     fleet.scale_to(5)

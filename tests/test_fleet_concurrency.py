@@ -1,0 +1,220 @@
+"""Concurrent fleet dispatcher: real hedging, lock-correct eviction,
+in-flight re-queue, and exactly-once accounting under fault injection."""
+import random
+import threading
+import time
+
+import pytest
+
+from repro.runtime.fleet import Replica, ReplicaFleet
+
+
+def _ok_replica(rid):
+    return Replica(rid=rid, execute=lambda job: ("ok", job))
+
+
+def test_concurrent_failures_never_evict_last_replica():
+    """Two failing replicas + concurrent submits: eviction is atomic, so the
+    fleet can never be drained to zero live replicas by failures."""
+    def make(rid):
+        def execute(job):
+            return "ok"
+        return Replica(rid=rid, execute=execute, fail_rate=1.0)
+
+    fleet = ReplicaFleet(make, n=2, seed=0)
+    errors = []
+
+    def hammer():
+        for _ in range(4):
+            try:
+                fleet.submit("job")
+            except RuntimeError as e:
+                errors.append(e)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(fleet.live()) >= 1  # last replica survived the failure storm
+    assert errors  # and the requests did surface their failures
+    fleet.close()
+
+
+def test_inflight_requeued_on_heartbeat_eviction():
+    """The module docstring's promise: an evicted replica's outstanding
+    requests go back on the queue and complete elsewhere."""
+    release = threading.Event()
+
+    def make(rid):
+        if rid == 0:
+            def execute(job):
+                release.wait(5.0)  # stalls until the test lets go
+                return ("stalled", job)
+        else:
+            def execute(job):
+                return ("fast", job)
+        return Replica(rid=rid, execute=execute)
+
+    fleet = ReplicaFleet(make, n=1, seed=0)  # only the stalling replica
+    result = {}
+
+    def submit():
+        result["out"] = fleet.submit("job", hedge=False)
+
+    t = threading.Thread(target=submit)
+    t.start()
+    deadline = time.time() + 5.0
+    while fleet.in_flight() == 0 and time.time() < deadline:
+        time.sleep(0.002)
+    assert fleet.in_flight() == 1  # stuck on replica 0
+
+    fleet.scale_to(2)  # replica 1 joins; replica 0 then misses its beats
+    for _ in range(fleet.max_missed):
+        fleet.heartbeat(responding={1})
+    t.join(5.0)
+    assert not t.is_alive()
+    out, meta = result["out"]
+    assert out == ("fast", "job") and meta["replica"] == 1
+    assert meta["requeues"] == 1 and fleet.requeue_count == 1
+    assert not fleet.replicas[0].healthy
+    release.set()  # let the stalled thread finish; its result is discarded
+    fleet.close()
+
+
+def test_hedge_fires_real_duplicate_and_loser_is_cancelled():
+    """A straggling primary gets a real duplicate on the backup after the
+    rolling-p95 deadline; the fast backup wins every time."""
+    def make(rid):
+        return Replica(rid=rid, execute=lambda job: ("ok", rid),
+                       straggle_rate=1.0 if rid == 0 else 0.0,
+                       straggle_s=1.0)  # 50ms real stall in Replica.call
+
+    fleet = ReplicaFleet(make, n=2, seed=2)
+    # warm the backup's rolling wall-clock p95 so the hedge deadline is armed
+    fleet.replicas[0].straggle_rate = 0.0
+    for _ in range(24):
+        fleet.submit("warm")
+    fleet.replicas[0].straggle_rate = 1.0
+
+    h0, c0 = fleet.hedge_count, fleet.cancelled_count
+    metas = [fleet.submit("job")[1] for _ in range(12)]
+    hedged = [m for m in metas if m["hedges"]]
+    assert fleet.hedge_count - h0 == sum(m["hedges"] for m in metas)
+    assert hedged, "no hedge fired against a 100% straggling replica"
+    # the fast backup won every hedged request (loser discarded on arrival)
+    assert all(m["replica"] == 1 for m in hedged)
+    deadline = time.time() + 5.0
+    while fleet.in_flight() > 0 and time.time() < deadline:
+        time.sleep(0.005)  # let straggling losers land and be discarded
+    assert fleet.cancelled_count > c0
+    fleet.close()
+
+
+def test_sequential_mode_is_deterministic():
+    """max_workers=1 reproduces the pre-threaded dispatcher bit-for-bit:
+    same RNG draw order, same results, same counters."""
+    def run_once():
+        fleet = ReplicaFleet(_ok_replica, n=3, seed=7, max_workers=1)
+        outs = fleet.submit_many(list(range(20)))
+        state = (fleet.hedge_count, fleet.failover_count,
+                 [m["replica"] for _, m in outs])
+        fleet.close()
+        return [o for o, _ in outs], state
+
+    outs1, state1 = run_once()
+    outs2, state2 = run_once()
+    assert outs1 == outs2 and state1 == state2
+    assert outs1 == [("ok", j) for j in range(20)]
+
+
+def test_submit_many_preserves_order_and_telemetry():
+    fleet = ReplicaFleet(_ok_replica, n=4, seed=0)
+    outs = fleet.submit_many(list(range(40)))
+    assert [o for o, _ in outs] == [("ok", j) for j in range(40)]
+    for _, meta in outs:
+        assert {"replica", "latency_s", "attempts", "hedges", "requeues"} \
+            <= set(meta)
+    assert fleet.queue_depth() == 0 and fleet.in_flight() == 0
+    fleet.close()
+
+
+@pytest.mark.slow
+def test_submit_many_stress_no_request_lost_or_double_counted():
+    """Sustained concurrent batches under fault injection + elastic churn:
+    every request completes exactly once, in order, and the fleet counters
+    match the per-request metadata exactly."""
+    def make(rid):
+        def execute(job):
+            time.sleep(0.001)
+            return ("ok", job)
+        return Replica(
+            rid=rid, execute=execute,
+            fail_rate=0.25 if rid % 4 == 0 else 0.0,
+            straggle_rate=0.2 if rid % 4 == 1 else 0.0, straggle_s=0.2)
+
+    fleet = ReplicaFleet(make, n=4, seed=5)
+    rng = random.Random(5)
+    stop = threading.Event()
+
+    def churn():
+        while not stop.is_set():
+            live = {r.rid for r in fleet.live()}
+            if len(live) > 2 and rng.random() < 0.5:
+                victim = rng.choice(sorted(live))
+                for _ in range(fleet.max_missed):
+                    fleet.heartbeat(responding=live - {victim})
+            else:
+                fleet.scale_to(4)
+            time.sleep(0.01)
+
+    churner = threading.Thread(target=churn)
+    churner.start()
+    try:
+        total = 0
+        for batch in range(6):
+            reqs = [(batch, i) for i in range(50)]
+            outs = fleet.submit_many(reqs)
+            payloads = [o[1] for o, _ in outs]
+            assert payloads == reqs  # exactly once, in order, none lost
+            total += len(outs)
+            assert sum(m["hedges"] for _, m in outs) <= fleet.hedge_count
+        assert total == 300
+    finally:
+        stop.set()
+        churner.join()
+    assert fleet.queue_depth() == 0
+    # dead rids' dispatcher state is GC'd once drained (whitebox): only the
+    # registry keeps tombstones, so churn can't grow the hot-path dicts
+    live_rids = {r.rid for r in fleet.live()}
+    deadline = time.time() + 5.0
+    while time.time() < deadline and set(fleet._queues) - live_rids:
+        time.sleep(0.005)
+        live_rids = {r.rid for r in fleet.live()}
+    assert set(fleet._queues) == live_rids
+    assert len(fleet.replicas) > len(live_rids)  # tombstones do remain
+    fleet.close()
+
+
+def test_server_embed_memo_hits_on_repeated_prompt(monkeypatch):
+    """`EcoLLMServer._resolve_query` memoizes open-world prompt embeddings."""
+    from repro.launch.serve import build_server
+    from repro.runtime import server as server_mod
+    from repro.runtime.server import Request
+
+    server, _ = build_server("smarthome", n_queries=20, budget=2.0, seed=0)
+    calls = {"n": 0}
+    real_embed = server_mod.embed_text
+
+    def counting_embed(text):
+        calls["n"] += 1
+        return real_embed(text)
+
+    monkeypatch.setattr(server_mod, "embed_text", counting_embed)
+    r1 = server.handle(Request(prompt="how do I reset the thermostat?"))
+    r2 = server.handle(Request(prompt="how do I reset the thermostat?"))
+    assert calls["n"] == 1  # second handle hit the LRU memo
+    assert server.embed_cache_hits == 1 and server.embed_cache_misses == 1
+    assert r1.path_key == r2.path_key
+    server.handle(Request(prompt="a different prompt entirely"))
+    assert calls["n"] == 2
