@@ -162,11 +162,12 @@ def run_cca_only(dep: Deployment, lam: int) -> Result:
 
 
 def build_rps(dep: Deployment, lam: int, *, dsqe_steps: int = 250,
-              tau: float = 0.03) -> RuntimePathSelector:
+              tau: float = 0.03, use_kernel: bool = False) -> RuntimePathSelector:
     cca = critical_component_analysis(dep.table, lam=lam, tau=tau)
     emb = dep.domain.query_embeddings[dep.train_idx]
     dsqe = train_dsqe(emb, cca.set_ids, len(cca.set_vocab), steps=dsqe_steps, seed=SEED)
-    return RuntimePathSelector(dep.space, dsqe, cca, dep.table, emb, lam=lam)
+    return RuntimePathSelector(dep.space, dsqe, cca, dep.table, emb, lam=lam,
+                               use_kernel=use_kernel)
 
 
 def run_eco(dep: Deployment, lam: int, slo: SLO | None = None,

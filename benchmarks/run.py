@@ -97,6 +97,19 @@ def bench_batch() -> None:
          f"exact={all(r.exact_match for r in rows)}")
 
 
+def bench_select() -> None:
+    from benchmarks import select_batch_speedup as sb
+
+    t0 = time.time()
+    r = sb.run()
+    print("\n=== Select: per-query / numpy batch / fused kernel ===")
+    print(sb.render(r))
+    _csv("select_batch_speedup", (time.time() - t0) * 1e6,
+         f"vs_select={r.speedup_vs_select:.1f}x;vs_batch={r.speedup_vs_batch:.2f}x;"
+         f"backend={r.backend};parity={r.decisions_match};"
+         f"fallbacks={r.fallback_rows}")
+
+
 def bench_fleet() -> None:
     from benchmarks import fleet_throughput as ft
 
@@ -159,6 +172,7 @@ def bench_kernels() -> None:
 
 BENCHES = {
     "batch": bench_batch,
+    "select": bench_select,
     "fleet": bench_fleet,
     "kernels": bench_kernels,
     "table3": bench_table3,

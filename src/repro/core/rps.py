@@ -3,16 +3,31 @@
 Online per-query decision:
   1. project the query embedding with the trained DSQE; nearest prototype
      reveals the critical component set;
-  2. filter paths: SLO-feasible ∧ critical set ⊆ path (Eq. 13);
+  2. filter paths: SLO-feasible ∧ critical set ⊆ path (Eq. 13) ∧ evaluated
+     (never-explored paths have no evidence and are excluded);
   3. score surviving paths by similarity-weighted kNN over training queries
      (Eq. 14) and pick the argmax;
   4. fallback for out-of-distribution queries (no valid path): best global
      path honoring the critical set, cheapest above the accuracy bar.
 
-The whole decision is a handful of matvecs over precomputed tables — the
-fused Pallas kernel (`repro.kernels.dsqe_score`) executes steps 1-3 in one
-VMEM-resident pass on TPU; this module is the reference implementation and
-the CPU path.
+The whole decision is a handful of matvecs over precomputed tables.
+``RuntimePathSelector(use_kernel=True)`` routes ``select_batch`` through the
+fused scoring pass in ``repro.kernels.dsqe_score``: DSQE projection, hard
+top-k kNN voting, the tie-break prior, and per-query SLO masking run as one
+jitted program over device-resident tables (the Pallas kernel on TPU, the
+XLA-compiled ref elsewhere); only argmax decoding and the rare
+infeasible-row fallback stay on the host.  Numpy remains the reference
+implementation (``use_kernel=False``, and always for single-query
+``select``).  The two engines make identical decisions modulo exact float
+ties: the fused pass scores in float32 (numpy accumulates in float64), so
+candidates within ~1 ulp of each other can in principle resolve
+differently, and an EXACT similarity tie at the kNN boundary resolves to
+the lowest index in the fused pass but to an unspecified tied member in
+numpy's ``argpartition`` — neither occurs on the parity suite or on real
+float similarities.  SLO feasibility is compared in
+float32 with directed rounding (tables up, thresholds down), so the fused
+engine can only be *stricter* at a boundary within one float32 ulp of the
+threshold — it never admits a path the float64 oracle rejects.
 """
 from __future__ import annotations
 
@@ -26,6 +41,19 @@ from repro.core.dsqe import DSQE
 from repro.core.emulator import EvalTable
 from repro.core.paths import MODULES, Path, PathSpace
 from repro.core.slo import SLO
+
+def _f32_ceil(x: np.ndarray) -> np.ndarray:
+    """Smallest float32 >= each float64 value (inf/0 map exactly)."""
+    y = np.asarray(x, np.float32)
+    low = y.astype(np.float64) < np.asarray(x, np.float64)
+    return np.where(low, np.nextafter(y, np.float32(np.inf)), y)
+
+
+def _f32_floor(x: np.ndarray) -> np.ndarray:
+    """Largest float32 <= each float64 value (inf/0 map exactly)."""
+    y = np.asarray(x, np.float32)
+    high = y.astype(np.float64) > np.asarray(x, np.float64)
+    return np.where(high, np.nextafter(y, np.float32(-np.inf)), y)
 
 
 @dataclass
@@ -65,13 +93,24 @@ class RuntimePathSelector:
         t = self.table
         P = len(t.paths)
         # per-path expected latency/cost: mean over evaluated queries
-        with np.errstate(invalid="ignore"):
+        # (all-NaN columns — never-explored paths — warn as "empty slice")
+        import warnings
+        with np.errstate(invalid="ignore"), warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
             self.path_latency = np.nanmean(t.latency, axis=0)
             self.path_cost = np.nanmean(t.cost, axis=0)
             self.path_mean_acc = np.nanmean(t.accuracy, axis=0)
         self.path_latency = np.nan_to_num(self.path_latency, nan=np.inf)
         self.path_cost = np.nan_to_num(self.path_cost, nan=np.inf)
         self.path_mean_acc = np.nan_to_num(self.path_mean_acc, nan=0.0)
+        # paths never explored by SBA have no evidence (all-NaN columns →
+        # inf latency/cost above): under an unconstrained SLO `inf <= inf`
+        # would pass the filter, so exclude them explicitly
+        self.path_evaluated = t.evaluated.any(axis=0)
+        # plain-float copies keep the Decision-building epilogue off the
+        # numpy-scalar conversion path (it is shared by both engines)
+        self._lat_f = [float(x) for x in self.path_latency]
+        self._cost_f = [float(x) for x in self.path_cost]
 
         K = len(self.cca.set_vocab)
         self.path_contains_set = np.zeros((K, P), bool)
@@ -89,6 +128,79 @@ class RuntimePathSelector:
         self.train_best_path = np.array(self.cca.best_path, np.int64)
         rows = np.arange(len(t.query_ids))
         self.train_best_acc = t.accuracy[rows, self.train_best_path]
+        self._kernel_state = None  # device tables + jitted pass, built lazily
+        import threading
+        self._kernel_build_lock = threading.Lock()  # concurrent handle_batch
+        # the fallback depends only on (set_id, slo) over frozen tables, so
+        # a batch with many infeasible rows resolves each distinct case once
+        self._fallback_memo: dict[tuple[int, SLO], Path] = {}
+
+    # -- fused-kernel scoring pass --------------------------------------------
+
+    def _ensure_kernel(self):
+        """Device-resident tables + the jitted end-to-end scoring pass.
+
+        Built once: every table the decision needs (prototypes, projected
+        train embeddings, kNN vote weights, containment, latency/cost,
+        prior, validity) is pushed to the default device as float32, and the
+        DSQE projection + fused score is jitted as one program.  Each batch
+        then costs one host->device transfer of (B, d) embeddings and (B, 2)
+        SLOs and one device->host read of scores + set ids.
+        """
+        if self._kernel_state is not None:
+            return self._kernel_state
+        with self._kernel_build_lock:
+            if self._kernel_state is not None:  # raced: another thread built it
+                return self._kernel_state
+            return self._build_kernel_state()
+
+    def _build_kernel_state(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.dsqe import project
+        from repro.kernels.dsqe_score.ops import dsqe_score
+        from repro.kernels.dsqe_score.ref import NEG_INF
+
+        # masked rows come back as NEG_INF; anything above half of it is a
+        # real (feasible) score — the constant is shared with kernel/ref
+        self._kernel_floor = NEG_INF / 2
+
+        N, P = len(self.table.query_ids), len(self.table.paths)
+        pathw = np.zeros((N, P), np.float32)
+        pathw[np.arange(N), self.train_best_path] = np.nan_to_num(self.train_best_acc)
+        # SLO feasibility compares float32 in-kernel but float64 in numpy:
+        # round the latency/cost tables UP to float32 (and the thresholds
+        # DOWN, in _score_batch_kernel) so the kernel can only be stricter —
+        # it never admits a path the float64 oracle would reject
+        tables = tuple(jnp.asarray(x, jnp.float32) for x in (
+            self._protos_unit, pathw, self.path_contains_set,
+            _f32_ceil(self.path_latency), _f32_ceil(self.path_cost),
+            1e-3 * self.path_mean_acc, self.path_evaluated))
+        params = jax.tree.map(jnp.asarray, self.dsqe.params)
+        train_proj = jnp.asarray(self.train_emb_proj, jnp.float32)
+        knn = min(self.knn, N)
+
+        def _pass(params, embs, slo, train, protos, pathw, contains, lat,
+                  cost, prior, valid):
+            z = project(params, embs)  # (B, d) unit-norm DSQE projection
+            return dsqe_score(z, protos, train, pathw, contains, lat, cost,
+                              prior, valid, slo, knn=knn)
+
+        self._kernel_state = (params, (train_proj,) + tables, jax.jit(_pass))
+        return self._kernel_state
+
+    def _score_batch_kernel(self, embs: np.ndarray, max_lat: np.ndarray,
+                            max_cost: np.ndarray):
+        """One jitted pass: (B, P) masked scores + (B,) set ids as numpy."""
+        import jax.numpy as jnp
+
+        params, tables, score_pass = self._ensure_kernel()
+        slo = jnp.asarray(np.stack([_f32_floor(max_lat), _f32_floor(max_cost)],
+                                   axis=1))
+        scores, set_ids = score_pass(params, jnp.asarray(embs, jnp.float32),
+                                     slo, *tables)
+        return np.asarray(scores), np.asarray(set_ids, np.int64)
 
     # -- Algorithm 3 ----------------------------------------------------------
 
@@ -103,17 +215,20 @@ class RuntimePathSelector:
             (self.path_latency <= slo.max_latency_s)
             & (self.path_cost <= slo.max_cost_usd)
             & self.path_contains_set[set_id]
+            & self.path_evaluated
         )
-        sims = self.train_emb_proj @ z  # (N,)
         if not feasible.any():
             path = self._fallback(set_id, slo)
             j = self._path_index[path]
             dt = time.perf_counter() - t0
             return Decision(path, set_id, True, dt,
-                            float(self.path_latency[j]), float(self.path_cost[j]),
+                            self._lat_f[j], self._cost_f[j],
                             batch_overhead_s=dt)
 
-        # Eq. 14: sum over k nearest training queries of w_q * A(q, P_q) * I[P_q == P]
+        # Eq. 14: sum over k nearest training queries of w_q * A(q, P_q) *
+        # I[P_q == P].  The similarity pass runs only for in-distribution
+        # queries — fallback rows above never pay for it.
+        sims = self.train_emb_proj @ z  # (N,)
         k = min(self.knn, sims.shape[0])
         nn = np.argpartition(-sims, k - 1)[:k]
         w = np.maximum(sims[nn], 0.0)
@@ -125,41 +240,24 @@ class RuntimePathSelector:
         j = int(np.argmax(scores))
         dt = time.perf_counter() - t0
         return Decision(self.table.paths[j], set_id, False, dt,
-                        float(self.path_latency[j]), float(self.path_cost[j]),
+                        self._lat_f[j], self._cost_f[j],
                         batch_overhead_s=dt)
 
-    def select_batch(self, query_embs: np.ndarray, slos) -> list[Decision]:
-        """Vectorized Algorithm 3 over a batch of queries.
-
-        ``slos`` is one SLO for the whole batch or a per-query sequence.
-        One DSQE projection, one train-similarity matmul, and one (B, P)
-        score scatter replace B independent ``select`` calls.  The algorithm
-        (kNN vote, score prior, tie-breaks) is identical to ``select``;
-        note the batched projection/similarity matmuls may differ from the
-        single-query matvecs in the last float ulp (BLAS accumulation
-        order), so a decision can in principle diverge when two candidates
-        are within ~1 ulp of each other.
-        """
+    def _score_batch_numpy(self, embs: np.ndarray, max_lat: np.ndarray,
+                           max_cost: np.ndarray):
+        """Reference vectorized scoring: (B, P) masked scores + (B,) set ids."""
         import jax.numpy as jnp
 
-        t0 = time.perf_counter()
-        embs = np.asarray(query_embs)
         B = embs.shape[0]
-        slo_list = [slos] * B if isinstance(slos, SLO) else list(slos)
-        if len(slo_list) != B:
-            raise ValueError(f"got {len(slo_list)} SLOs for {B} queries")
-
         Z = np.asarray(self.dsqe.project(jnp.asarray(embs)))  # (B, d)
         set_ids = np.argmax(Z @ self._protos_unit.T, axis=1)  # (B,)
 
-        max_lat = np.array([s.max_latency_s for s in slo_list])
-        max_cost = np.array([s.max_cost_usd for s in slo_list])
         feasible = (
             (self.path_latency[None, :] <= max_lat[:, None])
             & (self.path_cost[None, :] <= max_cost[:, None])
             & self.path_contains_set[set_ids]
+            & self.path_evaluated[None, :]
         )  # (B, P)
-        has_feasible = feasible.any(axis=1)
 
         sims = self.train_emb_proj @ Z.T  # (N, B)
         P = len(self.table.paths)
@@ -172,26 +270,61 @@ class RuntimePathSelector:
         np.add.at(scores, (rows, self.train_best_path[nn].ravel()), contrib.ravel())
         scores = scores + 1e-3 * self.path_mean_acc
         scores[~feasible] = -np.inf
-        best = np.argmax(scores, axis=1)
+        return scores, set_ids
 
+    def select_batch(self, query_embs: np.ndarray, slos) -> list[Decision]:
+        """Vectorized Algorithm 3 over a batch of queries.
+
+        ``slos`` is one SLO for the whole batch or a per-query sequence.
+        One DSQE projection, one train-similarity pass, and one (B, P)
+        score scatter replace B independent ``select`` calls; with
+        ``use_kernel=True`` the whole scoring pass instead runs as a single
+        jitted device program (see the module docstring).  The algorithm
+        (hard top-k kNN vote, score prior, tie-breaks) is identical to
+        ``select``; batched matmuls (and the kernel's float32 accumulation)
+        may differ from the single-query matvecs in the last float ulp, so a
+        decision can in principle diverge when two candidates are within
+        ~1 ulp of each other.
+        """
+        t0 = time.perf_counter()
+        embs = np.asarray(query_embs)
+        B = embs.shape[0]
+        slo_list = [slos] * B if isinstance(slos, SLO) else list(slos)
+        if len(slo_list) != B:
+            raise ValueError(f"got {len(slo_list)} SLOs for {B} queries")
+        max_lat = np.array([s.max_latency_s for s in slo_list])
+        max_cost = np.array([s.max_cost_usd for s in slo_list])
+
+        if self.use_kernel:
+            scores, set_ids = self._score_batch_kernel(embs, max_lat, max_cost)
+            floor = self._kernel_floor
+        else:
+            scores, set_ids = self._score_batch_numpy(embs, max_lat, max_cost)
+            floor = -np.inf
+        best = np.argmax(scores, axis=1)
+        has_feasible = scores[np.arange(B), best] > floor
+
+        set_l, best_l, feas_l = set_ids.tolist(), best.tolist(), has_feasible.tolist()
         picks: list[tuple[int, bool]] = []
         for b in range(B):
-            if has_feasible[b]:
-                picks.append((int(best[b]), False))
+            if feas_l[b]:
+                picks.append((best_l[b], False))
             else:
-                path = self._fallback(int(set_ids[b]), slo_list[b])
+                path = self._fallback(set_l[b], slo_list[b])
                 picks.append((self._path_index[path], True))
         total_overhead = time.perf_counter() - t0
         overhead = total_overhead / max(B, 1)  # amortized per-query share
-        return [Decision(self.table.paths[j], int(set_ids[b]), fell_back,
-                         overhead, float(self.path_latency[j]),
-                         float(self.path_cost[j]),
+        return [Decision(self.table.paths[j], set_l[b], fell_back,
+                         overhead, self._lat_f[j], self._cost_f[j],
                          batch_overhead_s=total_overhead)
                 for b, (j, fell_back) in enumerate(picks)]
 
     def _fallback(self, set_id: int, slo: SLO) -> Path:
         """OOD fallback (Algorithm 3 lines 10-11): respect the critical set,
         demand accuracy above the floor, minimize cost (λ=0) / latency."""
+        hit = self._fallback_memo.get((set_id, slo))
+        if hit is not None:
+            return hit
         mask = self.path_contains_set[set_id] & (self.path_mean_acc >= self.acc_floor)
         if not mask.any():
             mask = self.path_mean_acc >= self.acc_floor
@@ -199,7 +332,9 @@ class RuntimePathSelector:
             mask = np.ones(len(self.table.paths), bool)
         second = self.path_latency if self.lam == 1 else self.path_cost
         cand = np.where(mask)[0]
-        return self.table.paths[int(cand[np.argmin(second[cand])])]
+        path = self.table.paths[int(cand[np.argmin(second[cand])])]
+        self._fallback_memo[(set_id, slo)] = path
+        return path
 
 
 def build_static_policy(table: EvalTable, lam: int, tol: float = 0.02) -> int:

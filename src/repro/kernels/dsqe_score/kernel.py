@@ -1,17 +1,28 @@
 """Fused Runtime Path Selection Pallas TPU kernel (paper Algorithm 3).
 
 The paper's RPS runs per query in 30-50 ms of host Python.  On a TPU serving
-fleet the decision is three matvecs and a masked reduction over tables that
+fleet the decision is a few matvecs and a masked reduction over tables that
 fit comfortably in VMEM; this kernel fuses them so selection costs
 microseconds per query batch:
 
   1. prototype similarities  (Bq, d) x (K, d)   -> nearest component set k*
-  2. train-query similarities (Bq, d) x (N, d)  -> soft kNN weights
-  3. path scores: weights (Bq, N) @ path one-hot A-weighted (N, P)
-  4. feasibility mask: SLO (latency/cost) ∧ critical-set containment row k*
+     (single argmax — the same tie semantics as the numpy selector)
+  2. train-query similarities (Bq, d) x (N, d)  -> hard top-k kNN vote
+     weights (Eq. 14), accumulated by k unrolled argmax-extract steps
+  3. path scores: vote weights (Bq, N) @ path one-hot A-weighted (N, P),
+     plus the 1e-3 * path_mean_acc tie-break prior
+  4. feasibility mask: per-query SLO (latency/cost) ∧ critical-set
+     containment row k* ∧ evaluated-path validity
 
 Outputs masked scores (argmax outside, trivially) — one grid step per query
 block, all tables resident in VMEM (N, P, K ≲ few hundred: <2 MB).
+
+Tie semantics: ``jnp.argmax`` picks the first maximum, so exactly-tied
+prototype similarities resolve to the lowest set id (matching the numpy
+selector's ``np.argmax``) and exactly-tied train similarities at the
+k-boundary admit the lowest-index training row — identical to the ref
+oracle.  The numpy selector's ``np.argpartition`` leaves exact k-boundary
+ties unspecified instead; see ref.py for the documented divergence caveat.
 """
 from __future__ import annotations
 
@@ -21,12 +32,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG_INF = -1e30
+from repro.kernels.dsqe_score.ref import NEG_INF
 
 
 def _dsqe_kernel(q_ref, protos_ref, train_ref, pathw_ref, contains_ref,
-                 lat_ref, cost_ref, slo_ref, score_ref, set_ref, *,
-                 temperature: float, k_valid: int, n_valid: int):
+                 lat_ref, cost_ref, prior_ref, valid_ref, slo_ref,
+                 score_ref, set_ref, *, knn: int, k_valid: int, n_valid: int):
     q = q_ref[...]  # (Bq, d)
     protos = protos_ref[...]  # (K, d)
     train = train_ref[...]  # (N, d)
@@ -34,29 +45,41 @@ def _dsqe_kernel(q_ref, protos_ref, train_ref, pathw_ref, contains_ref,
     contains = contains_ref[...]  # (K, P) 1.0 if path contains set k
     lat = lat_ref[...]  # (1, P)
     cost = cost_ref[...]  # (1, P)
-    max_lat = slo_ref[0]
-    max_cost = slo_ref[1]
+    prior = prior_ref[...]  # (1, P) tie-break prior (pre-scaled)
+    valid = valid_ref[...]  # (1, P) 1.0 for evaluated paths
+    slo = slo_ref[...]  # (Bq, 128): [:, 0] max_latency, [:, 1] max_cost
+    max_lat = slo[:, 0:1]  # (Bq, 1)
+    max_cost = slo[:, 1:2]
 
     psims = jax.lax.dot_general(q, protos, (((1,), (1,)), ((), ())))  # (Bq, K)
     k_iota = jax.lax.broadcasted_iota(jnp.int32, psims.shape, 1)
     psims = jnp.where(k_iota < k_valid, psims, NEG_INF)  # padded protos never win
-    set_id = jnp.argmax(psims, axis=1)  # (Bq,)
-    set_onehot = (psims >= jnp.max(psims, axis=1, keepdims=True)).astype(jnp.float32)
+    set_id = jnp.argmax(psims, axis=1)  # (Bq,) first max wins
+    set_onehot = (k_iota == set_id[:, None]).astype(jnp.float32)
 
     tsims = jax.lax.dot_general(q, train, (((1,), (1,)), ((), ())))  # (Bq, N)
     n_iota = jax.lax.broadcasted_iota(jnp.int32, tsims.shape, 1)
-    tsims = jnp.where(n_iota < n_valid, tsims, NEG_INF)  # padded rows get ~0 weight
-    w = jnp.exp((tsims - jnp.max(tsims, axis=1, keepdims=True)) / temperature)
-    w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
-    scores = jax.lax.dot(w, pathw)  # (Bq, P)
+    tsims = jnp.where(n_iota < n_valid, tsims, NEG_INF)  # padded rows never vote
+    # hard top-k kNN vote weights: k unrolled extract-max steps.  Each step
+    # claims the first-index row of the current maximum with weight
+    # max(sim, 0); once rows are exhausted (all NEG_INF) the weight is 0.
+    votes = jnp.zeros_like(tsims)
+    remaining = tsims
+    for _ in range(knn):
+        m = jnp.max(remaining, axis=1, keepdims=True)  # (Bq, 1)
+        pick = (n_iota == jnp.argmax(remaining, axis=1)[:, None])
+        votes = votes + pick.astype(jnp.float32) * jnp.maximum(m, 0.0)
+        remaining = jnp.where(pick, NEG_INF, remaining)
+    scores = jax.lax.dot(votes, pathw) + prior  # (Bq, P)
 
     feas_set = jax.lax.dot(set_onehot, contains)  # (Bq, P) >0 where contained
-    feasible = (feas_set > 0.5) & (lat <= max_lat) & (cost <= max_cost)
+    feasible = ((feas_set > 0.5) & (valid > 0.5)
+                & (lat <= max_lat) & (cost <= max_cost))
     score_ref[...] = jnp.where(feasible, scores, NEG_INF)
     set_ref[...] = set_id[:, None].astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("temperature", "block_q", "interpret", "k_valid", "n_valid"))
+@functools.partial(jax.jit, static_argnames=("knn", "block_q", "interpret", "k_valid", "n_valid"))
 def dsqe_score_kernel(
     q: jax.Array,  # (Bq, d) projected query embeddings
     protos: jax.Array,  # (K, d)
@@ -65,9 +88,11 @@ def dsqe_score_kernel(
     contains: jax.Array,  # (K, P) float 0/1
     lat: jax.Array,  # (1, P)
     cost: jax.Array,  # (1, P)
-    slo: jax.Array,  # (2,) [max_latency, max_cost]
+    prior: jax.Array,  # (1, P)
+    valid: jax.Array,  # (1, P)
+    slo: jax.Array,  # (Bq, 128) per-query [max_latency, max_cost] in lanes 0-1
     *,
-    temperature: float = 0.05,
+    knn: int = 16,
     block_q: int = 128,
     interpret: bool = False,
     k_valid: int = 0,
@@ -77,7 +102,7 @@ def dsqe_score_kernel(
     block_q = min(block_q, Bq)
     assert Bq % block_q == 0
     K, N, P = protos.shape[0], train.shape[0], path_weights.shape[1]
-    kernel = functools.partial(_dsqe_kernel, temperature=temperature,
+    kernel = functools.partial(_dsqe_kernel, knn=knn,
                                k_valid=k_valid or K, n_valid=n_valid or N)
     return pl.pallas_call(
         kernel,
@@ -90,7 +115,9 @@ def dsqe_score_kernel(
             pl.BlockSpec((K, P), lambda i: (0, 0)),
             pl.BlockSpec((1, P), lambda i: (0, 0)),
             pl.BlockSpec((1, P), lambda i: (0, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, P), lambda i: (0, 0)),
+            pl.BlockSpec((1, P), lambda i: (0, 0)),
+            pl.BlockSpec((block_q, slo.shape[1]), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_q, P), lambda i: (i, 0)),
@@ -101,4 +128,4 @@ def dsqe_score_kernel(
             jax.ShapeDtypeStruct((Bq, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(q, protos, train, path_weights, contains, lat, cost, slo)
+    )(q, protos, train, path_weights, contains, lat, cost, prior, valid, slo)

@@ -1,4 +1,11 @@
-"""Public wrapper for the fused RPS scoring kernel (lane padding)."""
+"""Public wrapper for the fused RPS scoring kernel.
+
+Dispatch: on TPU the fused Pallas kernel runs compiled (lane/sublane padding
+handled here); on CPU/GPU the pure-jnp ref — same semantics, same tie
+contract — is used instead so the path stays XLA-compiled rather than
+falling into the slow Pallas interpreter.  Pass ``interpret=True`` to force
+the Pallas kernel body through the interpreter (kernel validation tests).
+"""
 from __future__ import annotations
 
 import functools
@@ -7,6 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dsqe_score.kernel import dsqe_score_kernel
+from repro.kernels.dsqe_score.ref import dsqe_score_ref
+
+_ref_jit = functools.partial(jax.jit, static_argnames=("knn",))(dsqe_score_ref)
 
 
 def _is_tpu() -> bool:
@@ -21,27 +31,37 @@ def _pad2(x, m0, m1, fill=0.0):
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("temperature", "interpret"))
-def dsqe_score(q, protos, train, path_weights, contains, lat, cost, slo,
-               *, temperature: float = 0.05, interpret: bool | None = None):
-    """Batched fused path selection.  Returns (masked scores (Bq, P), set_id).
+def dsqe_score(q, protos, train, path_weights, contains, lat, cost,
+               prior, valid, slo, *, knn: int = 16,
+               interpret: bool | None = None):
+    """Batched fused path selection.  Returns (masked scores (Bq, P), set_id (Bq,)).
 
     Shapes: q (Bq,d), protos (K,d), train (N,d), path_weights (N,P),
-    contains (K,P), lat/cost (P,), slo (2,).
+    contains (K,P), lat/cost/prior/valid (P,), slo (Bq,2) per-query
+    [max_latency, max_cost] (a single (2,) SLO broadcasts).
     """
-    if interpret is None:
-        interpret = not _is_tpu()
     Bq, P = q.shape[0], path_weights.shape[1]
-    q_p = _pad2(q, 8, 128)
+    slo = jnp.broadcast_to(jnp.asarray(slo, jnp.float32).reshape(-1, 2), (Bq, 2))
+    if interpret is None and not _is_tpu():
+        return _ref_jit(q, protos, train, path_weights, contains,
+                        lat, cost, prior, valid, slo, knn=knn)
+    interpret = bool(interpret)
+    # pad the query batch so the kernel's block_q = min(128, Bq) divides it
+    bq_mult = 128 if Bq > 128 else 8
+    q_p = _pad2(q, bq_mult, 128)
     protos_p = _pad2(protos, 8, 128)  # kernel masks rows >= k_valid
     train_p = _pad2(train, 8, 128)  # kernel masks rows >= n_valid
     pw_p = _pad2(path_weights, train_p.shape[0], 128)[: train_p.shape[0]]
     ct_p = _pad2(contains, protos_p.shape[0], 128)[: protos_p.shape[0]]
+    # padded path lanes: valid=0 keeps them infeasible regardless of SLO
     lat_p = _pad2(lat.reshape(1, -1), 1, 128, fill=jnp.inf)
     cost_p = _pad2(cost.reshape(1, -1), 1, 128, fill=jnp.inf)
+    prior_p = _pad2(prior.reshape(1, -1), 1, 128)
+    valid_p = _pad2(valid.reshape(1, -1), 1, 128)
+    slo_p = _pad2(slo, q_p.shape[0], 128)
     scores, set_id = dsqe_score_kernel(
-        q_p, protos_p, train_p, pw_p, ct_p, lat_p, cost_p,
-        jnp.asarray(slo, jnp.float32), temperature=temperature, interpret=interpret,
+        q_p, protos_p, train_p, pw_p, ct_p, lat_p, cost_p, prior_p, valid_p,
+        slo_p, knn=knn, interpret=interpret,
         k_valid=protos.shape[0], n_valid=train.shape[0],
     )
     return scores[:Bq, :P], set_id[:Bq, 0]

@@ -24,7 +24,8 @@ from repro.runtime.server import EcoLLMServer, Request
 
 
 def build_server(domain_name: str, *, n_queries: int = 120, budget: float = 5.0,
-                 lam: int = 0, seed: int = 0, n_replicas: int = 2):
+                 lam: int = 0, seed: int = 0, n_replicas: int = 2,
+                 use_kernel: bool = False):
     dom = build_domain(domain_name, n_queries=n_queries, seed=seed)
     space = PathSpace()
     train_idx, test_idx = train_test_split(dom, 0.3)
@@ -33,7 +34,8 @@ def build_server(domain_name: str, *, n_queries: int = 120, budget: float = 5.0,
     cca = critical_component_analysis(table, lam=lam)
     emb_train = dom.query_embeddings[train_idx]
     dsqe = train_dsqe(emb_train, cca.set_ids, len(cca.set_vocab), seed=seed)
-    rps = RuntimePathSelector(space, dsqe, cca, table, emb_train, lam=lam)
+    rps = RuntimePathSelector(space, dsqe, cca, table, emb_train, lam=lam,
+                              use_kernel=use_kernel)
     server = EcoLLMServer(dom, rps, emu.exec, n_replicas=n_replicas, seed=seed)
     return server, test_idx
 
@@ -46,14 +48,24 @@ def main() -> None:
     ap.add_argument("--latency-first", action="store_true")
     ap.add_argument("--max-latency", type=float, default=float("inf"))
     ap.add_argument("--max-cost", type=float, default=float("inf"))
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route batch selection through the fused dsqe_score pass")
+    ap.add_argument("--batch", action="store_true",
+                    help="serve via handle_batch (one selection pass)")
     args = ap.parse_args()
 
     server, test_idx = build_server(args.domain, n_queries=args.queries,
-                                    budget=args.budget, lam=int(args.latency_first))
+                                    budget=args.budget, lam=int(args.latency_first),
+                                    use_kernel=args.use_kernel)
     slo = SLO(max_latency_s=args.max_latency, max_cost_usd=args.max_cost)
+    if args.batch:
+        responses = server.handle_batch(
+            [Request(prompt="", qid=qid, slo=slo) for qid in test_idx])
+    else:
+        responses = [server.handle(Request(prompt="", qid=qid, slo=slo))
+                     for qid in test_idx]
     accs, lats, costs, ovh = [], [], [], []
-    for qid in test_idx:
-        resp = server.handle(Request(prompt="", qid=qid, slo=slo))
+    for resp in responses:
         accs.append(resp.accuracy)
         lats.append(resp.latency_s)
         costs.append(resp.cost_usd)

@@ -151,7 +151,10 @@ class EcoLLMServer:
             "queue_depth": self.fleet.queue_depth(),
             "in_flight": self.fleet.in_flight(),
             "slo_violation_rate": self.tracker.violation_rate,
+            "slo_latency_violation_rate": self.tracker.latency_violation_rate,
+            "slo_cost_violation_rate": self.tracker.cost_violation_rate,
             "requests": self.tracker.total,
+            "rps_engine": "kernel" if self.rps.use_kernel else "numpy",
             "embed_cache": {"hits": self.embed_cache_hits,
                             "misses": self.embed_cache_misses},
         }

@@ -193,7 +193,9 @@ def test_rps_fallback_mask_degradation():
 
 
 def test_kernel_and_reference_rps_agree(setup):
-    """The fused Pallas dsqe_score kernel selects like the numpy RPS."""
+    """The fused Pallas dsqe_score kernel selects like the numpy RPS: hard
+    top-k voting + prior + argmax critical set make the decisions identical,
+    not merely feasibility-compatible."""
     import jax.numpy as jnp
 
     from repro.kernels.dsqe_score.ops import dsqe_score
@@ -211,19 +213,87 @@ def test_kernel_and_reference_rps_agree(setup):
     q = np.asarray(dsqe.project(jnp.asarray(dom.query_embeddings[test_idx[:8]])))
     protos = np.asarray(dsqe.params["protos"])
     protos = protos / np.linalg.norm(protos, axis=-1, keepdims=True)
+    slo_rows = np.tile([slo.max_latency_s, slo.max_cost_usd], (8, 1))
     scores, set_ids = dsqe_score(
         jnp.asarray(q), jnp.asarray(protos), jnp.asarray(rps.train_emb_proj),
         jnp.asarray(pw), jnp.asarray(rps.path_contains_set, jnp.float32),
         jnp.asarray(rps.path_latency, jnp.float32), jnp.asarray(rps.path_cost, jnp.float32),
-        jnp.asarray([slo.max_latency_s, slo.max_cost_usd]), interpret=True,
+        jnp.asarray(1e-3 * rps.path_mean_acc, jnp.float32),
+        jnp.asarray(rps.path_evaluated, jnp.float32),
+        jnp.asarray(slo_rows, jnp.float32), knn=rps.knn, interpret=True,
     )
+    scores = np.asarray(scores)
     for i, ti in enumerate(test_idx[:8]):
         d = rps.select(dom.query_embeddings[ti], slo)
         assert int(set_ids[i]) == d.set_id
-        if not d.used_fallback:
-            j_kernel = int(np.argmax(np.asarray(scores[i])))
-            assert np.asarray(scores[i])[j_kernel] > -1e29
-            # same feasible set; soft-kNN (kernel) vs hard-kNN may differ in
-            # argmax but must agree on feasibility of the numpy choice
-            j_ref = table.paths.index(d.path)
-            assert np.asarray(scores[i])[j_ref] > -1e29
+        if d.used_fallback:
+            assert not (scores[i] > -1e29).any()
+        else:
+            j_kernel = int(np.argmax(scores[i]))
+            assert scores[i][j_kernel] > -1e29
+            assert table.paths[j_kernel] == d.path
+
+
+def test_slo_tracker_violation_rate_bounded():
+    """A query violating both latency and cost SLOs counts once: the rate is
+    the violated-query fraction, bounded in [0, 1] (regression: the two
+    dimension counters used to be summed against one total, reaching 2.0)."""
+    from repro.core.slo import SLOTracker
+
+    tr = SLOTracker()
+    assert tr.violation_rate == 0.0  # empty tracker
+    slo = SLO(max_latency_s=1.0, max_cost_usd=0.001)
+    tr.record(slo, latency_s=5.0, cost_usd=0.5)  # violates BOTH dimensions
+    assert tr.violation_rate == 1.0
+    assert tr.latency_violation_rate == 1.0 and tr.cost_violation_rate == 1.0
+    tr.record(slo, latency_s=0.5, cost_usd=0.0005)  # compliant
+    tr.record(slo, latency_s=5.0, cost_usd=0.0005)  # latency only
+    assert tr.total == 3 and tr.violated_queries == 2
+    assert tr.violation_rate == pytest.approx(2 / 3)
+    assert tr.latency_violation_rate == pytest.approx(2 / 3)
+    assert tr.cost_violation_rate == pytest.approx(1 / 3)
+    assert 0.0 <= tr.violation_rate <= 1.0
+
+
+def test_unevaluated_paths_never_selected():
+    """Paths SBA never explored (all-NaN table columns -> inf latency/cost)
+    must not pass the SLO filter under unconstrained SLOs (inf <= inf) and
+    win on the prior alone."""
+    import jax
+
+    from repro.core.cca import CCAResult
+    from repro.core.dsqe import DSQE, init_dsqe
+    from repro.core.emulator import EvalTable
+
+    spec = {
+        "qproc": {"null": {}},
+        "retrieval": {"null": {}, "basic_rag": {"top_k": [2]}},
+        "cproc": {"null": {}},
+        "model": {"internlm2-1.8b": {}, "kimi-k2-cloud": {}},
+    }
+    space = PathSpace(spec)
+    paths = space.paths
+    assert len(paths) == 4
+    # path 0 was never evaluated (all-NaN column); 1-3 have zero accuracy so
+    # every kNN vote and the mean-acc prior are 0: under the old feasibility
+    # filter the unevaluated path 0 tied at score 0 and argmax picked it
+    acc = np.array([[np.nan, 0.0, 0.0, 0.0]] * 2)
+    lat = np.array([[np.nan, 1.0, 1.0, 1.0]] * 2)
+    cost = np.array([[np.nan, 0.001, 0.001, 0.001]] * 2)
+    evaluated = np.array([[False, True, True, True]] * 2)
+    table = EvalTable([0, 1], list(paths), acc, lat, cost, evaluated)
+    vocab = [()]  # empty critical set: satisfied by every path
+    cca = CCAResult(critical_sets=[vocab[0]] * 2, best_path=[1, 2],
+                    set_vocab=vocab, set_ids=np.array([0, 0]))
+    emb = np.random.RandomState(0).randn(2, 8).astype(np.float32)
+    dsqe = DSQE(params=jax.tree.map(np.asarray, init_dsqe(jax.random.key(0), 8, 1)),
+                n_sets=1)
+    rps = RuntimePathSelector(space, dsqe, cca, table, emb, lam=0, acc_floor=0.0)
+    assert not rps.path_evaluated[0] and rps.path_evaluated[1:].all()
+
+    d = rps.select(emb[0], SLO())  # unconstrained: inf <= inf
+    assert d.path != paths[0]
+    for engine in (False, True):
+        rps.use_kernel = engine
+        for dec in rps.select_batch(emb, SLO()):
+            assert dec.path != paths[0]

@@ -91,9 +91,13 @@ def test_moe_gmm_kernel(E, C, D, F, dtype):
     assert rel < (3e-2 if dtype == jnp.bfloat16 else 1e-5)
 
 
-@pytest.mark.parametrize("Bq,d,K,N,P", [(5, 64, 7, 50, 210), (1, 128, 3, 20, 64), (9, 512, 23, 105, 210)])
-def test_dsqe_score_kernel(Bq, d, K, N, P):
-    ks = jax.random.split(jax.random.key(Bq + K + N), 8)
+@pytest.mark.parametrize("Bq,d,K,N,P,knn",
+                         [(5, 64, 7, 50, 210, 16), (1, 128, 3, 20, 64, 8),
+                          (9, 512, 23, 105, 210, 16), (132, 32, 4, 30, 130, 4)])
+def test_dsqe_score_kernel(Bq, d, K, N, P, knn):
+    """Pallas kernel body (interpret) vs pure-jnp ref: hard top-k voting,
+    argmax critical set, prior, validity mask, per-query SLO vectors."""
+    ks = jax.random.split(jax.random.key(Bq + K + N), 10)
     norm = lambda x: x / jnp.linalg.norm(x, axis=-1, keepdims=True)
     q = norm(jax.random.normal(ks[0], (Bq, d)))
     pr = norm(jax.random.normal(ks[1], (K, d)))
@@ -102,13 +106,18 @@ def test_dsqe_score_kernel(Bq, d, K, N, P):
     ct = (jax.random.uniform(ks[5], (K, P)) < 0.4).astype(jnp.float32)
     lat = jax.random.uniform(ks[6], (P,)) * 5
     cost = jax.random.uniform(ks[7], (P,)) * 0.01
-    slo = jnp.array([3.0, 0.006])
-    s1, id1 = dsqe_score(q, pr, tr, pw, ct, lat, cost, slo, interpret=True)
-    s2, id2 = dsqe_score_ref(q, pr, tr, pw, ct, lat.reshape(1, -1), cost.reshape(1, -1), slo)
+    prior = jax.random.uniform(ks[8], (P,)) * 1e-3
+    valid = (jax.random.uniform(ks[9], (P,)) < 0.9).astype(jnp.float32)
+    slo = jnp.stack([jax.random.uniform(jax.random.key(1), (Bq,)) * 6,
+                     jax.random.uniform(jax.random.key(2), (Bq,)) * 0.012], axis=1)
+    s1, id1 = dsqe_score(q, pr, tr, pw, ct, lat, cost, prior, valid, slo,
+                         knn=knn, interpret=True)
+    s2, id2 = dsqe_score_ref(q, pr, tr, pw, ct, lat, cost, prior, valid, slo,
+                             knn=knn)
     live = (s1 > -1e29) & (s2 > -1e29)
     np.testing.assert_allclose(np.where(live, s1, 0), np.where(live, s2, 0), atol=1e-5)
     assert bool(jnp.all((s1 < -1e29) == (s2 < -1e29)))
-    assert bool(jnp.all(id1 == id2[:, 0]))
+    assert bool(jnp.all(id1 == id2))
 
 
 def test_kernel_matches_model_attention():
