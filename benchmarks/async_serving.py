@@ -1,0 +1,213 @@
+"""Micro-benchmark: micro-batched async admission vs the per-query path.
+
+Drives a Poisson open-loop arrival process (the open-world serving regime:
+arrivals don't wait for completions) through two front-ends over the SAME
+trained deployment and the SAME arrival trace:
+
+  * per-query baseline — each arrival is served by `EcoLLMServer.handle`
+    (one selection pass per query), FIFO.  Simulated on the arrival axis
+    with measured service times, which is *optimistic* for the baseline: it
+    pays zero scheduling overhead between requests.
+  * orchestrator — arrivals are `submit()`ed to the asyncio `Orchestrator`
+    in real time; micro-batched admission coalesces whatever is concurrent
+    into one fused `select_batch` pass + one non-blocking fleet fan-out per
+    bucket.
+
+The offered load is calibrated to ``OVERLOAD`` x the measured per-query
+capacity, so the baseline saturates (its queue — and therefore p50 latency —
+grows with the run) while the orchestrator's amortized selection keeps it
+ahead of the arrival process.  Reported: p50/p95/p99 completion latency for
+both, shed counts, mean bucket size, and the fused selector's jit trace
+count (shape-bucketed caching: traces are bounded by distinct power-of-two
+buckets, not distinct batch sizes).
+
+Gating: the orchestrator must be no slower than the per-query baseline on
+p50 at equal offered load (it is typically many times faster, even on a
+2-core CPU host), nothing may be lost (served + shed == offered), and the
+bucketed selector must not retrace within a bucket.
+
+  PYTHONPATH=src python -m benchmarks.async_serving
+"""
+from __future__ import annotations
+
+import asyncio
+import random
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.rps import bucket_batch
+from repro.core.slo import SLO
+from repro.launch.serve import build_server
+from repro.runtime.orchestrator import Orchestrator, Overloaded
+from repro.runtime.server import Request
+
+SLO_GRID = [
+    SLO(),
+    SLO(max_latency_s=4.0, max_cost_usd=0.008),
+    SLO(max_latency_s=2.0, max_cost_usd=0.004),
+]
+
+OVERLOAD = 1.5  # offered load as a multiple of per-query capacity
+
+
+@dataclass
+class Result:
+    n: int
+    rate_qps: float
+    per_query_ms: float  # measured baseline service time
+    p50_seq_ms: float
+    p95_seq_ms: float
+    p99_seq_ms: float
+    p50_orch_ms: float
+    p95_orch_ms: float
+    p99_orch_ms: float
+    speedup_p50: float
+    shed: int
+    shed_rate: float
+    batches: int
+    mean_bucket: float
+    kernel_traces: int
+    distinct_buckets: int
+
+
+def _requests(server, test_idx, n: int) -> list[Request]:
+    return [Request(prompt="", qid=test_idx[i % len(test_idx)],
+                    slo=SLO_GRID[i % len(SLO_GRID)]) for i in range(n)]
+
+
+def _baseline(server, reqs, arrivals) -> np.ndarray:
+    """FIFO per-query serving on the arrival axis with measured service
+    times: latency_i = completion_i - arrival_i, completion = max(arrival,
+    previous completion) + service."""
+    lats, now = [], 0.0
+    for req, arr in zip(reqs, arrivals):
+        t0 = time.perf_counter()
+        server.handle(req)
+        svc = time.perf_counter() - t0
+        now = max(now, arr) + svc
+        lats.append(now - arr)
+    return np.asarray(lats)
+
+
+async def _orchestrated(server, reqs, arrivals, *, max_batch: int,
+                        max_wait_ms: float):
+    """Real-time open-loop drive through the orchestrator; latency is
+    completion (ticket event) minus the intended arrival instant."""
+    orch = Orchestrator(server, max_batch=max_batch, max_wait_ms=max_wait_ms,
+                        max_queue=4 * max_batch)
+    await orch.start()
+    t0 = time.perf_counter()
+    tickets = []
+    for req, arr in zip(reqs, arrivals):
+        delay = t0 + arr - time.perf_counter()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        tickets.append((arr, await orch.submit(req)))
+    results = await asyncio.gather(*(t.wait() for _, t in tickets))
+    await orch.stop()
+    lats, shed = [], 0
+    for (arr, t), r in zip(tickets, results):
+        if isinstance(r, Overloaded):
+            shed += 1
+            continue
+        lats.append(t.event("completed") - (t0 + arr))
+    return np.asarray(lats), shed, orch.stats()
+
+
+def run(n_requests: int = 320, domain: str = "agriculture", seed: int = 0,
+        max_batch: int = 32, max_wait_ms: float = 2.0) -> Result:
+    server, test_idx = build_server(domain, n_queries=60, budget=3.0,
+                                    seed=seed, use_kernel=True)
+    reqs = _requests(server, test_idx, n_requests)
+
+    # record every selection batch size to derive the expected bucket set
+    batch_sizes = []
+    orig = server.rps.select_batch
+
+    def recording(embs, slos):
+        batch_sizes.append(len(embs))
+        return orig(embs, slos)
+
+    server.rps.select_batch = recording
+    try:
+        # warmup: prefix/exec caches plus a jit trace for EVERY bucket the
+        # admission loop can produce (1..max_batch) — tracing is a one-off
+        # compile cost and must not land inside the timed run
+        for req in reqs[: len(test_idx)]:
+            server.handle(req)
+        warm = server.domain.query_embeddings[test_idx]
+        for B in sorted({bucket_batch(b) for b in range(1, max_batch + 1)}):
+            embs = np.tile(warm, (B // len(warm) + 1, 1))[:B]
+            server.rps.select_batch(embs, [SLO()] * B)
+        # calibrate per-query capacity, then offer OVERLOAD x that rate
+        probe = reqs[:64]
+        t0 = time.perf_counter()
+        for req in probe:
+            server.handle(req)
+        per_query_s = (time.perf_counter() - t0) / len(probe)
+        rate = OVERLOAD / per_query_s
+        rng = random.Random(seed)
+        arrivals = np.cumsum([rng.expovariate(rate)
+                              for _ in range(n_requests)])
+
+        lat_seq = _baseline(server, reqs, arrivals)
+        lat_orch, shed, stats = asyncio.run(_orchestrated(
+            server, reqs, arrivals, max_batch=max_batch,
+            max_wait_ms=max_wait_ms))
+    finally:
+        server.rps.select_batch = orig
+
+    assert len(lat_orch) + shed == n_requests, "requests lost in flight"
+    buckets = {bucket_batch(b) for b in batch_sizes}
+    p = lambda xs, q: float(np.percentile(xs, q) * 1e3)  # noqa: E731
+    return Result(
+        n=n_requests, rate_qps=rate, per_query_ms=per_query_s * 1e3,
+        p50_seq_ms=p(lat_seq, 50), p95_seq_ms=p(lat_seq, 95),
+        p99_seq_ms=p(lat_seq, 99),
+        p50_orch_ms=p(lat_orch, 50), p95_orch_ms=p(lat_orch, 95),
+        p99_orch_ms=p(lat_orch, 99),
+        speedup_p50=p(lat_seq, 50) / max(p(lat_orch, 50), 1e-9),
+        shed=shed, shed_rate=shed / n_requests,
+        batches=stats["batches"],
+        mean_bucket=stats["dispatched"] / max(stats["batches"], 1),
+        kernel_traces=server.rps.kernel_trace_count,
+        distinct_buckets=len(buckets))
+
+
+def render(r: Result) -> str:
+    return "\n".join([
+        f"open-loop Poisson serving, {r.n} requests at {r.rate_qps:.0f} q/s "
+        f"({OVERLOAD:.1f}x per-query capacity, {r.per_query_ms:.2f} ms/query):",
+        f"  per-query handle   p50 {r.p50_seq_ms:8.1f} ms   "
+        f"p95 {r.p95_seq_ms:8.1f} ms   p99 {r.p99_seq_ms:8.1f} ms",
+        f"  micro-batched      p50 {r.p50_orch_ms:8.1f} ms   "
+        f"p95 {r.p95_orch_ms:8.1f} ms   p99 {r.p99_orch_ms:8.1f} ms",
+        f"  p50 speedup        {r.speedup_p50:8.1f} x  (target: never slower)",
+        f"  shed               {r.shed} / {r.n}  ({r.shed_rate*100:.1f}%)",
+        f"  dispatch buckets   {r.batches}  (mean size {r.mean_bucket:.1f})",
+        f"  selector traces    {r.kernel_traces} over {r.distinct_buckets} "
+        f"distinct jit buckets (no per-size retrace)",
+    ])
+
+
+def main() -> None:
+    r = run()
+    print(render(r))
+    assert r.n >= 256, "benchmark below gated scale"
+    # micro-batched admission must never lose to the per-query baseline on
+    # p50 at equal offered load — even on a 2-core CPU host (the expected
+    # margin under 1.5x overload is several-fold, so no noise allowance)
+    assert r.speedup_p50 >= 1.0, \
+        f"micro-batched p50 only {r.speedup_p50:.2f}x the per-query baseline"
+    assert r.mean_bucket > 1.0, \
+        "admission never coalesced: offered load too low to micro-batch"
+    # shape-bucketed jit: traces bounded by distinct buckets, not sizes
+    assert r.kernel_traces <= r.distinct_buckets, \
+        f"{r.kernel_traces} traces for {r.distinct_buckets} buckets — " \
+        "the fused selector is retracing within a bucket"
+
+
+if __name__ == "__main__":
+    main()

@@ -122,6 +122,19 @@ def bench_fleet() -> None:
          f"dup={r.duplicated};counters_exact={r.counters_exact}")
 
 
+def bench_serving() -> None:
+    from benchmarks import async_serving as asv
+
+    t0 = time.time()
+    r = asv.run()
+    print("\n=== Serving: per-query handle vs micro-batched admission ===")
+    print(asv.render(r))
+    _csv("async_serving", (time.time() - t0) * 1e6,
+         f"p50_speedup={r.speedup_p50:.1f}x;p50_orch_ms={r.p50_orch_ms:.1f};"
+         f"p99_orch_ms={r.p99_orch_ms:.1f};shed_rate={r.shed_rate:.3f};"
+         f"mean_bucket={r.mean_bucket:.1f};traces={r.kernel_traces}")
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline as rl
     from repro.perf.roofline import render
@@ -173,6 +186,7 @@ def bench_kernels() -> None:
 BENCHES = {
     "batch": bench_batch,
     "select": bench_select,
+    "serving": bench_serving,
     "fleet": bench_fleet,
     "kernels": bench_kernels,
     "table3": bench_table3,

@@ -56,6 +56,14 @@ def _f32_floor(x: np.ndarray) -> np.ndarray:
     return np.where(high, np.nextafter(y, np.float32(-np.inf)), y)
 
 
+def bucket_batch(B: int) -> int:
+    """Power-of-two jit bucket (floor 8) for a fused-selector batch of B
+    queries.  Padding every micro-batch up to its bucket keeps the jitted
+    scoring pass from retracing on each distinct batch size: any B in
+    (bucket/2, bucket] shares one trace."""
+    return max(8, 1 << max(B - 1, 0).bit_length())
+
+
 @dataclass
 class Decision:
     path: Path
@@ -129,6 +137,10 @@ class RuntimePathSelector:
         rows = np.arange(len(t.query_ids))
         self.train_best_acc = t.accuracy[rows, self.train_best_path]
         self._kernel_state = None  # device tables + jitted pass, built lazily
+        # number of times the jitted scoring pass was (re)traced; with
+        # shape-bucketed padding this is bounded by the distinct buckets
+        # seen, not the distinct batch sizes (regression-tested)
+        self.kernel_trace_count = 0
         import threading
         self._kernel_build_lock = threading.Lock()  # concurrent handle_batch
         # the fallback depends only on (set_id, slo) over frozen tables, so
@@ -183,6 +195,7 @@ class RuntimePathSelector:
 
         def _pass(params, embs, slo, train, protos, pathw, contains, lat,
                   cost, prior, valid):
+            self.kernel_trace_count += 1  # runs at trace time only
             z = project(params, embs)  # (B, d) unit-norm DSQE projection
             return dsqe_score(z, protos, train, pathw, contains, lat, cost,
                               prior, valid, slo, knn=knn)
@@ -192,15 +205,34 @@ class RuntimePathSelector:
 
     def _score_batch_kernel(self, embs: np.ndarray, max_lat: np.ndarray,
                             max_cost: np.ndarray):
-        """One jitted pass: (B, P) masked scores + (B,) set ids as numpy."""
+        """One jitted pass: (B, P) masked scores + (B,) set ids as numpy.
+
+        The query batch is padded up to its power-of-two bucket
+        (``bucket_batch``) so varying micro-batch sizes reuse one jit trace
+        per bucket instead of retracing per distinct B.  Pad rows are zero
+        queries with unconstrained SLOs; every per-row stage of the fused
+        pass is row-independent and the pad rows are sliced off here, before
+        decode, so they can neither retrace nor leak into any decision.
+        """
         import jax.numpy as jnp
 
+        B = embs.shape[0]
+        Bb = bucket_batch(B)
+        lat32, cost32 = _f32_floor(max_lat), _f32_floor(max_cost)
+        embs32 = np.asarray(embs, np.float32)
+        if Bb != B:
+            pad = Bb - B
+            embs32 = np.concatenate(
+                [embs32, np.zeros((pad, embs32.shape[1]), np.float32)])
+            lat32 = np.concatenate(
+                [lat32, np.full(pad, np.inf, np.float32)])
+            cost32 = np.concatenate(
+                [cost32, np.full(pad, np.inf, np.float32)])
         params, tables, score_pass = self._ensure_kernel()
-        slo = jnp.asarray(np.stack([_f32_floor(max_lat), _f32_floor(max_cost)],
-                                   axis=1))
-        scores, set_ids = score_pass(params, jnp.asarray(embs, jnp.float32),
-                                     slo, *tables)
-        return np.asarray(scores), np.asarray(set_ids, np.int64)
+        slo = jnp.asarray(np.stack([lat32, cost32], axis=1))
+        scores, set_ids = score_pass(params, jnp.asarray(embs32), slo,
+                                     *tables)
+        return np.asarray(scores)[:B], np.asarray(set_ids, np.int64)[:B]
 
     # -- Algorithm 3 ----------------------------------------------------------
 

@@ -4,12 +4,24 @@
       --queries 120 --budget 5 --max-latency 4 --max-cost 0.01
 
 Runs the full ECO-LLM lifecycle: build domain corpus, explore paths with SBA,
-CCA + DSQE training, then serve the held-out queries through the elastic
-fleet and report accuracy / latency / cost / SLO attainment.
+CCA + DSQE training, then serve the held-out queries and report accuracy /
+latency / cost / SLO attainment.  Serving modes:
+
+  * default        per-query ``handle`` loop (compatibility shim)
+  * ``--batch``    one ``handle_batch`` bucket (one fused selection pass)
+  * ``--async``    open-loop async driver: every query is ``submit()``ed to
+                   the ``Orchestrator`` (Poisson arrivals with ``--rate``,
+                   back-to-back otherwise) and micro-batched admission
+                   coalesces the selection passes
+  * ``--repl``     interactive open-world REPL over the orchestrator: type a
+                   prompt, get the routed response + ticket timeline
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import random
+import sys
 
 import numpy as np
 
@@ -20,6 +32,7 @@ from repro.core.emulator import Emulator
 from repro.core.paths import PathSpace
 from repro.core.rps import RuntimePathSelector
 from repro.core.slo import SLO
+from repro.runtime.orchestrator import Overloaded
 from repro.runtime.server import EcoLLMServer, Request
 
 
@@ -40,6 +53,56 @@ def build_server(domain_name: str, *, n_queries: int = 120, budget: float = 5.0,
     return server, test_idx
 
 
+async def drive_async(server: EcoLLMServer, reqs: list[Request], *,
+                      max_batch: int = 32, max_wait_ms: float = 2.0,
+                      rate_qps: float = 0.0, seed: int = 0):
+    """Open-loop driver: submit every request through the orchestrator and
+    gather (responses, shed_count, admission stats).  The admission queue is
+    sized to the workload: this is a closed request list, so overflow shed
+    would only reflect the driver outpacing dispatch, not real overload."""
+    orch = server.orchestrator(max_batch=max_batch, max_wait_ms=max_wait_ms,
+                               max_queue=max(256, len(reqs)))
+    await orch.start()
+    rng = random.Random(seed)
+    tickets = []
+    for req in reqs:
+        if rate_qps > 0:
+            await asyncio.sleep(rng.expovariate(rate_qps))
+        tickets.append(await orch.submit(req))
+    results = await asyncio.gather(*(t.wait() for t in tickets))
+    await orch.stop()
+    served = [r for r in results if not isinstance(r, Overloaded)]
+    return served, len(results) - len(served), orch.stats()
+
+
+async def repl(server: EcoLLMServer, slo: SLO) -> None:
+    """Interactive open-world serving: one orchestrator, one prompt a line."""
+    orch = server.orchestrator()
+    await orch.start()
+    loop = asyncio.get_running_loop()
+    print("eco-llm> type a prompt (blank line to exit)")
+    while True:
+        sys.stdout.write("eco-llm> ")
+        sys.stdout.flush()
+        line = await loop.run_in_executor(None, sys.stdin.readline)
+        if not line or not line.strip():
+            break
+        ticket = await orch.submit(Request(prompt=line.strip(), slo=slo))
+        resp = await ticket
+        if isinstance(resp, Overloaded):
+            print(f"  shed ({resp.reason}); retry later")
+            continue
+        t0 = ticket.events[0][1]
+        timeline = " -> ".join(f"{n}+{(ts - t0) * 1e3:.1f}ms"
+                               for n, ts in ticket.events)
+        print(f"  {resp.text}")
+        print(f"  path={resp.path_key}")
+        print(f"  latency={resp.latency_s:.2f}s cost=${resp.cost_usd:.4f} "
+              f"slo_ok={resp.slo_ok}  [{timeline}]")
+    await orch.stop()
+    print("system state:", server.system_state())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--domain", default="automotive")
@@ -51,26 +114,46 @@ def main() -> None:
     ap.add_argument("--use-kernel", action="store_true",
                     help="route batch selection through the fused dsqe_score pass")
     ap.add_argument("--batch", action="store_true",
-                    help="serve via handle_batch (one selection pass)")
+                    help="serve via the handle_batch shim (one selection pass)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="drive the held-out queries through the async "
+                         "orchestrator (micro-batched admission)")
+    ap.add_argument("--repl", action="store_true",
+                    help="interactive open-world REPL over the orchestrator")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate for --async (q/s; 0 = "
+                         "back-to-back)")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
     args = ap.parse_args()
 
     server, test_idx = build_server(args.domain, n_queries=args.queries,
                                     budget=args.budget, lam=int(args.latency_first),
                                     use_kernel=args.use_kernel)
     slo = SLO(max_latency_s=args.max_latency, max_cost_usd=args.max_cost)
-    if args.batch:
-        responses = server.handle_batch(
-            [Request(prompt="", qid=qid, slo=slo) for qid in test_idx])
+    if args.repl:
+        asyncio.run(repl(server, slo))
+        return
+    reqs = [Request(prompt="", qid=qid, slo=slo) for qid in test_idx]
+    shed = 0
+    if args.use_async:
+        responses, shed, stats = asyncio.run(drive_async(
+            server, reqs, max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms, rate_qps=args.rate))
+        print(f"admission: {stats['batches']} buckets, mean size "
+              f"{stats['dispatched'] / max(stats['batches'], 1):.1f}, "
+              f"shed {shed}")
+    elif args.batch:
+        responses = server.handle_batch(reqs)
     else:
-        responses = [server.handle(Request(prompt="", qid=qid, slo=slo))
-                     for qid in test_idx]
+        responses = [server.handle(r) for r in reqs]
     accs, lats, costs, ovh = [], [], [], []
     for resp in responses:
         accs.append(resp.accuracy)
         lats.append(resp.latency_s)
         costs.append(resp.cost_usd)
         ovh.append(resp.selection_overhead_s)
-    print(f"{args.domain}: served {len(test_idx)} queries")
+    print(f"{args.domain}: served {len(responses)}/{len(test_idx)} queries")
     print(f"  accuracy      {np.mean(accs)*100:.1f}%")
     print(f"  TTFT          {np.mean(lats):.2f}s (p95 {np.percentile(lats, 95):.2f}s)")
     print(f"  cost          ${np.mean(costs)*1000:.2f} /1k queries")

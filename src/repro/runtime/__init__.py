@@ -1,2 +1,4 @@
 from repro.runtime.server import EcoLLMServer, Request, Response  # noqa: F401
-from repro.runtime.fleet import ReplicaFleet, Replica  # noqa: F401
+from repro.runtime.fleet import ReplicaFleet, Replica, FleetFuture  # noqa: F401
+from repro.runtime.orchestrator import (  # noqa: F401
+    Orchestrator, Overloaded, Ticket)

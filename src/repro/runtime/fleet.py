@@ -24,10 +24,13 @@ fully exercised:
 work deque served by up to ``per_replica_concurrency`` pool workers that
 drain their own deque first and steal the tail of the longest other deque
 when idle, so batch wall-clock tracks the slowest replica instead of the sum
-over all calls.  With ``max_workers=1`` the fleet degrades to the
-deterministic sequential dispatcher (bit-for-bit the pre-threaded behaviour,
-including its simulated post-hoc hedge accounting) — the mode the parity
-tests pin.
+over all calls.  ``submit_many_async`` is the non-blocking variant: it
+returns ``FleetFuture`` handles immediately and pushes completion through
+callbacks (a background monitor thread covers hedging/orphan rescue), so an
+asyncio front-end never parks a thread per request.  With ``max_workers=1``
+the fleet degrades to the deterministic sequential dispatcher (bit-for-bit
+the pre-threaded behaviour, including its simulated post-hoc hedge
+accounting) — the mode the parity tests pin.
 
 Accounting is exact under concurrency: every hedge/failover/requeue/cancel
 increments the fleet counter and the per-flight counter inside the same
@@ -126,13 +129,15 @@ class _Flight:
 
     __slots__ = ("request", "hedge_allowed", "lock", "done", "result", "meta",
                  "error", "failures", "hedges", "requeues",
-                 "tried_failed", "active", "completed", "claims")
+                 "tried_failed", "active", "completed", "claims", "callbacks")
 
     def __init__(self, request, hedge_allowed: bool):
         self.request = request
         self.hedge_allowed = hedge_allowed
         self.lock = threading.Lock()
         self.done = threading.Event()
+        # zero-arg completion thunks; None once fired (exactly-once contract)
+        self.callbacks: Optional[list] = []
         self.result = None
         self.meta: Optional[dict] = None
         self.error: Optional[Exception] = None
@@ -147,6 +152,46 @@ class _Flight:
         # dispatch a flight that a worker is about to start (guarded by
         # the fleet lock)
         self.claims = 0
+
+
+class FleetFuture:
+    """Completion handle for one flight — the non-blocking half of
+    ``submit_many_async``.  ``result()`` blocks like ``submit`` would;
+    ``add_done_callback`` pushes completion instead, so an async front-end
+    can track thousands of flights without parking a thread on each."""
+
+    __slots__ = ("_flight",)
+
+    def __init__(self, flight: _Flight):
+        self._flight = flight
+
+    def done(self) -> bool:
+        return self._flight.done.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """(result, meta) of the winning execution; raises like ``submit``."""
+        if not self._flight.done.wait(timeout):
+            raise TimeoutError("flight still pending")
+        f = self._flight
+        if f.error is not None:
+            raise RuntimeError(f"request failed after retries: {f.error!r}")
+        return f.result, f.meta
+
+    def add_done_callback(self, fn: Callable[["FleetFuture"], None]) -> None:
+        """``fn(self)`` fires exactly once on completion — immediately if the
+        flight already finished, otherwise from the thread that finishes it
+        (possibly while fleet locks are held).  Callbacks must be fast and
+        must not call back into the fleet; hand real work to an event loop
+        (e.g. ``call_soon_threadsafe``)."""
+        f = self._flight
+        fire = False
+        with f.lock:
+            if f.callbacks is None:
+                fire = True
+            else:
+                f.callbacks.append(lambda: fn(self))
+        if fire:
+            fn(self)
 
 
 class ReplicaFleet:
@@ -195,6 +240,12 @@ class ReplicaFleet:
         self._pool = (ThreadPoolExecutor(
             max_workers=self.max_workers,
             thread_name_prefix="fleet") if self.max_workers > 1 else None)
+        # async flights are monitored (hedge / kick / orphan rescue) by a
+        # lazily-started background thread instead of the caller's loop
+        self._async_lock = threading.Lock()
+        self._async_flights: list[_Flight] = []
+        self._monitor: Optional[threading.Thread] = None
+        self._monitor_stop = False
         self.scale_to(n)
 
     # -- elasticity ----------------------------------------------------------
@@ -228,7 +279,33 @@ class ReplicaFleet:
         with self._lock:
             return sum(len(s) for s in self._active_by_rid.values())
 
+    def snapshot(self) -> dict:
+        """All fleet counters and load gauges under ONE lock acquisition.
+
+        Field-by-field reads (``fleet.hedge_count`` then ``queue_depth()``
+        ...) can interleave with completions, so the set of values observed
+        may correspond to no single fleet state and the invariant
+        ``counters == sum(per-request meta)`` can appear violated.  A
+        snapshot is internally consistent by construction.
+        """
+        with self._lock:
+            return {
+                "replicas": len(self._live),
+                "hedges": self.hedge_count,
+                "failovers": self.failover_count,
+                "requeues": self.requeue_count,
+                "cancelled": self.cancelled_count,
+                "queue_depth": sum(len(q) for q in self._queues.values()),
+                "in_flight": sum(len(s) for s in self._active_by_rid.values()),
+            }
+
     def close(self) -> None:
+        with self._async_lock:
+            self._monitor_stop = True
+            mon = self._monitor
+        self._wake.set()
+        if mon is not None:
+            mon.join(timeout=2.0)
         if self._pool is not None:
             self._pool.shutdown(wait=True)
 
@@ -307,6 +384,100 @@ class ReplicaFleet:
             return [self._submit_sequential(r, hedge) for r in requests]
         return self._run_flights([_Flight(r, hedge) for r in requests], hedge)
 
+    def submit_many_async(self, requests, hedge: bool = True) -> list[FleetFuture]:
+        """Non-blocking fan-out: enqueue the batch and return a
+        ``FleetFuture`` per request without waiting for any of them.
+
+        Completion is pushed through ``FleetFuture.add_done_callback`` from
+        the worker thread that finishes each flight, so an event loop can
+        await thousands of flights without a thread parked per request; a
+        persistent monitor thread takes over hedging/orphan rescue (the job
+        ``_run_flights`` does inline for the blocking entrypoints).  With
+        ``max_workers=1`` the deterministic sequential dispatcher runs
+        inline and the returned futures are already complete — same RNG
+        draw order and accounting as ``submit_many``."""
+        requests = list(requests)
+        if self._pool is None:
+            if not self.live():  # match the threaded branch: fail at submit
+                raise RuntimeError("no live replicas")
+            out = []
+            for r in requests:
+                f = _Flight(r, hedge)
+                try:
+                    f.result, f.meta = self._submit_sequential(r, hedge)
+                except Exception as e:  # noqa: BLE001 — surfaced via future
+                    # store the ORIGINAL failure (the sequential dispatcher
+                    # chains it as __cause__) so FleetFuture.result wraps it
+                    # exactly once, same error surface as the threaded path
+                    f.error = getattr(e, "__cause__", None) or e
+                with f.lock:
+                    f.completed = True
+                self._finish(f)
+                out.append(FleetFuture(f))
+            return out
+        flights = [_Flight(r, hedge) for r in requests]
+        with self._lock:
+            if not self._live:
+                raise RuntimeError("no live replicas")
+            for f in flights:
+                self._enqueue_locked(f)
+        with self._async_lock:
+            self._async_flights.extend(
+                f for f in flights if not f.done.is_set())
+            self._ensure_monitor_locked()
+        self._wake.set()
+        return [FleetFuture(f) for f in flights]
+
+    @staticmethod
+    def _finish(f: _Flight) -> None:
+        """Flip the done event and fire completion callbacks exactly once.
+        ``done`` is set under the flight lock, atomically with nulling the
+        callback list: a concurrent ``add_done_callback`` that observes
+        ``callbacks is None`` is therefore guaranteed to see ``done`` set,
+        so its immediate ``fn(self)`` can call ``result()`` safely."""
+        with f.lock:
+            cbs, f.callbacks = f.callbacks, None
+            f.done.set()
+        if cbs:
+            for cb in cbs:
+                cb()
+
+    def _ensure_monitor_locked(self) -> None:
+        if self._monitor is None or not self._monitor.is_alive():
+            self._monitor_stop = False
+            self._monitor = threading.Thread(
+                target=self._monitor_loop, name="fleet-monitor", daemon=True)
+            self._monitor.start()
+
+    def _monitor_loop(self) -> None:
+        """Hedge/kick monitor for async flights — the counterpart of the
+        inline loop in ``_run_flights``, which only covers flights whose
+        caller is blocked waiting on them.  Parks itself (exits) after a
+        short quiet period with no async flights outstanding; the exit and
+        the ``_monitor`` unset are atomic under ``_async_lock``, so a
+        concurrent ``submit_many_async`` either sees the live thread or
+        starts a fresh one — flights are never left unmonitored."""
+        idle_polls = 0
+        while True:
+            with self._async_lock:
+                if self._monitor_stop:
+                    self._monitor = None
+                    return
+                self._async_flights = [f for f in self._async_flights
+                                       if not f.done.is_set()]
+                pending = list(self._async_flights)
+                if pending:
+                    idle_polls = 0
+                else:
+                    idle_polls += 1
+                    if idle_polls >= 4:  # ~0.2 s quiet: park until next use
+                        self._monitor = None
+                        return
+            if pending:
+                self._hedge_and_kick(pending, hedge=True)
+            self._wake.clear()
+            self._wake.wait(self._tick_s if pending else 0.05)
+
     # -- sequential reference dispatcher (deterministic mode) ----------------
 
     def _submit_sequential(self, request, hedge: bool):
@@ -337,7 +508,8 @@ class ReplicaFleet:
                 lat = min(lat, backup.stats.p95(default=lat))
             return out, {"replica": primary.rid, "latency_s": lat,
                          "attempts": attempts + 1}
-        raise RuntimeError(f"request failed after retries: {last_err!r}")
+        raise RuntimeError(
+            f"request failed after retries: {last_err!r}") from last_err
 
     # -- concurrent dispatcher ----------------------------------------------
 
@@ -388,7 +560,7 @@ class ReplicaFleet:
                     f.error = RuntimeError("no live replicas")
                     errored = True
             if errored:
-                f.done.set()
+                self._finish(f)
             return
         q = self._queues[target.rid]
         (q.appendleft if priority else q.append)(f)
@@ -495,7 +667,7 @@ class ReplicaFleet:
                     self.cancelled_count += 1  # loser of a hedge/requeue race
                 self._gc_rid_locked(rid)
             if winner:
-                f.done.set()
+                self._finish(f)
             self._wake.set()
             return
         give_up = False
@@ -517,7 +689,7 @@ class ReplicaFleet:
                 self._requeue_locked(f, exclude=set(f.tried_failed),
                                      priority=True)
         if give_up:
-            f.done.set()
+            self._finish(f)
         self._wake.set()
 
     def _hedge_deadline_for(self, exclude) -> Optional[float]:

@@ -1,0 +1,465 @@
+"""Asyncio-native serving front-end (paper §4: the always-on Runtime).
+
+One ``Orchestrator`` replaces the three parallel blocking entrypoints that
+had accreted around the server (``EcoLLMServer.handle``, ``handle_batch``,
+``ReplicaFleet.submit_many``): callers ``submit()`` requests with per-request
+SLO / priority / deadline and get an awaitable ``Ticket`` back.  A
+micro-batching admission loop coalesces concurrent submissions — up to
+``max_batch`` tickets or ``max_wait_ms`` after the first, whichever comes
+first — and dispatches each bucket as ONE fused
+``RuntimePathSelector.select_batch`` pass plus ONE non-blocking
+``ReplicaFleet.submit_many_async`` fan-out, so open-world traffic rides the
+amortized batch machinery by default instead of opt-in.
+
+Backpressure is explicit: the admission queue is bounded (``max_queue``) and
+overflow is rejected immediately with a typed ``Overloaded`` result (load
+shedding) instead of queueing without bound; a per-request ``deadline_s``
+additionally sheds tickets whose admission deadline lapsed before dispatch.
+Higher ``priority`` tickets are admitted first when a backlog forms.
+
+Every ticket carries a lifecycle timeline (``Ticket.events``):
+``admitted -> selected -> dispatched -> completed`` (or ``... -> shed``),
+stamped with ``time.perf_counter()``.  Selection overheads ride on the
+``Decision`` as before — amortized ``overhead_s`` plus the full
+``batch_overhead_s`` of the bucket's selection pass.
+
+The synchronous ``EcoLLMServer.handle`` / ``handle_batch`` survive as thin
+compatibility shims over ``dispatch_sync`` — the same bucket-dispatch
+pipeline with the blocking fleet fan-out, bit-for-bit the pre-orchestrator
+responses.
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+import threading
+import time
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Optional, Union
+
+import numpy as np
+
+if TYPE_CHECKING:  # circular only for typing: server builds an Orchestrator
+    from repro.runtime.server import EcoLLMServer, Request, Response
+
+
+@dataclass(frozen=True)
+class Overloaded:
+    """Typed load-shed result: the orchestrator refused this request instead
+    of queueing it without bound.  ``reason`` is ``"queue_full"`` (bounded
+    admission queue overflowed), ``"deadline"`` (the per-request admission
+    deadline lapsed before dispatch), ``"shutdown"``, or ``"stale_loop"``
+    (submitted in a previous, now-closed event-loop session — nothing can
+    await it anymore)."""
+
+    reason: str
+    queue_depth: int
+    max_queue: int
+
+
+class Ticket:
+    """Awaitable handle for one admitted (or shed) request.
+
+    ``await ticket`` / ``await ticket.wait()`` yields the ``Response`` — or
+    an ``Overloaded`` marker if the request was shed.  ``events`` is the
+    lifecycle timeline: ``[(name, perf_counter_ts), ...]`` through
+    ``admitted -> selected -> dispatched -> completed`` (``shed`` replaces
+    the tail for rejected tickets; ``failed`` for a bucket whose dispatch
+    raised — awaiting the ticket then re-raises that error).
+    """
+
+    __slots__ = ("request", "priority", "deadline_s", "deadline_at", "events",
+                 "_future")
+
+    def __init__(self, request: "Request", priority: int,
+                 deadline_s: Optional[float], future: asyncio.Future):
+        self.request = request
+        self.priority = priority
+        self.deadline_s = deadline_s
+        self.deadline_at: Optional[float] = None  # set on admission
+        self.events: list[tuple[str, float]] = []
+        self._future = future
+
+    def mark(self, name: str) -> None:
+        self.events.append((name, time.perf_counter()))
+
+    def event(self, name: str) -> Optional[float]:
+        """Timestamp of the first occurrence of ``name``, or None."""
+        for n, ts in self.events:
+            if n == name:
+                return ts
+        return None
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    @property
+    def shed(self) -> bool:
+        return (self._future.done() and not self._future.cancelled()
+                and self._future.exception() is None
+                and isinstance(self._future.result(), Overloaded))
+
+    def __await__(self):
+        return self._future.__await__()
+
+    async def wait(self) -> Union["Response", Overloaded]:
+        return await self._future
+
+
+_STOP_PRIO = float("inf")  # sorts after every real ticket in the heap
+
+
+class Orchestrator:
+    """Single async front-end over a trained ``EcoLLMServer``.
+
+    Usage (async)::
+
+        orch = Orchestrator(server, max_batch=32, max_wait_ms=2.0)
+        await orch.start()
+        ticket = await orch.submit(Request(...), priority=1, deadline_s=0.5)
+        response = await ticket            # Response | Overloaded
+        await orch.stop()                  # drains admitted tickets first
+
+    or ``async with Orchestrator(server) as orch: ...``.  The synchronous
+    ``dispatch_sync`` path (used by the ``handle``/``handle_batch`` shims)
+    shares the same one-``select_batch``-one-fan-out pipeline without
+    needing a running event loop.
+    """
+
+    def __init__(self, server: "EcoLLMServer", *, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, max_queue: int = 256,
+                 hedge: bool = True):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.server = server
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.max_queue = max_queue
+        self.hedge = hedge
+        # heap entries: (-priority, seq, ticket) — seq breaks ties FIFO and
+        # keeps ticket objects out of the comparison
+        self._queue: asyncio.PriorityQueue = asyncio.PriorityQueue(
+            maxsize=max_queue)
+        self._seq = itertools.count()
+        self._queue_loop: Optional[asyncio.AbstractEventLoop] = None
+        self._task: Optional[asyncio.Task] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._closed = False
+        # admission telemetry; completions land from fleet worker threads,
+        # shim dispatches from arbitrary caller threads — lock the counters
+        self._stats_lock = threading.Lock()
+        self.admitted = 0
+        self.shed_count = 0
+        self.deadline_shed_count = 0
+        self.batches = 0
+        self.dispatched = 0
+        self.completed = 0  # executions that produced a Response
+        self.failed = 0     # executions whose await re-raises
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self) -> "Orchestrator":
+        """Start the micro-batching admission loop on the running loop."""
+        if self._task is not None and not self._task.done():
+            return self
+        self._loop = asyncio.get_running_loop()
+        # the asyncio queue loop-binds on its first awaited get(); a fresh
+        # loop (a second asyncio.run session against the same orchestrator,
+        # e.g. the server-singleton) needs a fresh queue, otherwise the
+        # admission task dies instantly on a cross-loop get() and every
+        # subsequently submitted ticket hangs forever.  put_nowait/get_nowait
+        # are loop-free, so pending entries transfer safely.
+        if self._queue_loop is not self._loop:
+            # runs on the first start too (_queue_loop None): submits may
+            # have happened under an earlier, since-closed loop even if no
+            # admission loop ever ran there
+            old, self._queue = self._queue, asyncio.PriorityQueue(
+                maxsize=self.max_queue)
+            while not old.empty():
+                entry = old.get_nowait()
+                ticket = entry[2]
+                if ticket is None:
+                    # stale stop sentinel from a torn-down session: carrying
+                    # it over would make the fresh admission loop exit as
+                    # soon as it drains to it
+                    continue
+                if ticket._future.get_loop() is not self._loop:
+                    # the ticket's future is bound to a previous (dead)
+                    # loop: nothing in this session can await it, and
+                    # settling it could raise on the closed loop — shed it
+                    try:
+                        self._shed(ticket, "stale_loop")
+                    except RuntimeError:  # dead-loop future had awaiters
+                        pass
+                    continue
+                self._queue.put_nowait(entry)
+        self._queue_loop = self._loop
+        self._closed = False
+        self._task = self._loop.create_task(self._admission_loop())
+        return self
+
+    async def stop(self) -> None:
+        """Stop the admission loop, dispatching every already-admitted
+        ticket first; subsequent submits are shed with reason 'shutdown'.
+        Idempotent under concurrency: the task handle is claimed before the
+        first suspension point, so racing stop() calls enqueue exactly one
+        stop sentinel (a stale second sentinel would make the NEXT session's
+        admission loop exit on arrival)."""
+        task, self._task = self._task, None
+        # flag first: stop() before (or without) start() must still flip the
+        # orchestrator to shedding, else later submits enqueue onto a queue
+        # with no consumer and hang forever
+        self._closed = True
+        if task is None:
+            return
+        if not task.done():
+            await self._queue.put((_STOP_PRIO, next(self._seq), None))
+        await task
+
+    async def __aenter__(self) -> "Orchestrator":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def reconfigure(self, *, max_batch: Optional[int] = None,
+                    max_wait_ms: Optional[float] = None,
+                    max_queue: Optional[int] = None,
+                    hedge: Optional[bool] = None) -> "Orchestrator":
+        """Change the admission policy while the loop is NOT running (the
+        synchronous ``dispatch_sync`` path is policy-free, so a shim-created
+        orchestrator can be re-tuned before its first async ``start()``).
+        Already-enqueued tickets are carried over; if a smaller ``max_queue``
+        cannot hold them the overflow is shed (``queue_full``)."""
+        if self._task is not None and not self._task.done():
+            raise RuntimeError("cannot reconfigure a running admission loop")
+        if max_batch is not None:
+            if max_batch < 1:
+                raise ValueError("max_batch must be >= 1")
+            self.max_batch = max_batch
+        if max_wait_ms is not None:
+            self.max_wait_s = max_wait_ms / 1e3
+        if hedge is not None:
+            self.hedge = hedge
+        if max_queue is not None and max_queue != self.max_queue:
+            self.max_queue = max_queue
+            old, self._queue = self._queue, asyncio.PriorityQueue(
+                maxsize=max_queue)
+            while not old.empty():
+                entry = old.get_nowait()
+                try:
+                    self._queue.put_nowait(entry)
+                except asyncio.QueueFull:
+                    if entry[2] is not None:
+                        self._shed(entry[2], "queue_full")
+        return self
+
+    # -- admission -----------------------------------------------------------
+
+    async def submit(self, request: "Request", *, priority: int = 0,
+                     deadline_s: Optional[float] = None) -> Ticket:
+        """Admit one request; returns immediately with an awaitable Ticket.
+
+        If the bounded admission queue is full (or the orchestrator is
+        stopping) the ticket comes back already completed with a typed
+        ``Overloaded`` result — explicit load shedding, never unbounded
+        queueing.  ``priority`` orders admission under backlog (higher
+        first); ``deadline_s`` sheds the ticket if it is still waiting for
+        dispatch that many seconds after admission.
+        """
+        loop = asyncio.get_running_loop()
+        ticket = Ticket(request, priority, deadline_s, loop.create_future())
+        if self._closed:
+            self._shed(ticket, "shutdown")
+            return ticket
+        try:
+            self._queue.put_nowait((-float(priority), next(self._seq), ticket))
+        except asyncio.QueueFull:
+            self._shed(ticket, "queue_full")
+            return ticket
+        ticket.mark("admitted")
+        if deadline_s is not None:
+            ticket.deadline_at = ticket.events[-1][1] + deadline_s
+        with self._stats_lock:
+            self.admitted += 1
+        # yield once per admission: enqueueing itself never suspends, so a
+        # tight submit loop would otherwise starve the admission loop and
+        # spuriously shed a closed workload larger than max_queue
+        await asyncio.sleep(0)
+        return ticket
+
+    def _fail(self, ticket: Ticket, err: Exception) -> None:
+        ticket.mark("failed")
+        with self._stats_lock:
+            self.failed += 1
+        if not ticket._future.done():
+            ticket._future.set_exception(err)
+
+    def _shed(self, ticket: Ticket, reason: str) -> None:
+        ticket.mark("shed")
+        with self._stats_lock:
+            self.shed_count += 1
+            if reason == "deadline":
+                self.deadline_shed_count += 1
+        if not ticket._future.done():
+            ticket._future.set_result(
+                Overloaded(reason, self._queue.qsize(), self.max_queue))
+
+    async def _admission_loop(self) -> None:
+        """Accumulate concurrent submissions into buckets and dispatch each
+        as one fused selection pass + one fleet fan-out."""
+        while True:
+            entry = await self._queue.get()
+            if entry[2] is None:  # stop sentinel sorts last: queue is drained
+                return
+            bucket = [entry[2]]
+            t0 = time.perf_counter()
+            stop = False
+            while len(bucket) < self.max_batch:
+                remaining = self.max_wait_s - (time.perf_counter() - t0)
+                if remaining <= 0:
+                    break
+                try:
+                    nxt = await asyncio.wait_for(self._queue.get(), remaining)
+                except asyncio.TimeoutError:
+                    break  # deadline flush: dispatch the partial bucket
+                if nxt[2] is None:
+                    stop = True
+                    break
+                bucket.append(nxt[2])
+            now = time.perf_counter()
+            live = []
+            for t in bucket:
+                if t.deadline_at is not None and now > t.deadline_at:
+                    self._shed(t, "deadline")
+                else:
+                    live.append(t)
+            if live:
+                try:
+                    await self._dispatch(live)
+                except Exception as e:  # noqa: BLE001 — fail the bucket,
+                    # keep admitting: a dead admission loop would hang every
+                    # pending ticket forever
+                    for t in live:
+                        self._fail(t, e)
+            if stop:
+                return
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _select(self, reqs: list["Request"]):
+        """One fused selection pass for a bucket: resolve -> ``select_batch``
+        -> (query, path) jobs.  Shared by the async admission loop and the
+        synchronous shim path, so both produce identical decisions."""
+        srv = self.server
+        resolved = [srv._resolve_query(r) for r in reqs]
+        embs = np.stack([emb for _, emb in resolved])
+        decisions = srv.rps.select_batch(embs, [r.slo for r in reqs])
+        jobs = [(query, d.path) for (query, _), d in zip(resolved, decisions)]
+        return resolved, decisions, jobs
+
+    async def _dispatch(self, tickets: list[Ticket]) -> None:
+        """Dispatch one bucket without blocking the event loop: selection is
+        CPU-bound so it runs on the default executor; the fleet fan-out is
+        non-blocking and completes each ticket via callback."""
+        reqs = [t.request for t in tickets]
+        with self._stats_lock:
+            self.batches += 1
+            self.dispatched += len(tickets)
+        resolved, decisions, jobs = await self._loop.run_in_executor(
+            None, self._select, reqs)
+        for t in tickets:
+            t.mark("selected")
+        futures = self.server.fleet.submit_many_async(jobs, hedge=self.hedge)
+        for t in tickets:
+            t.mark("dispatched")
+        for t, (query, _), dec, fut in zip(tickets, resolved, decisions,
+                                           futures):
+            fut.add_done_callback(self._completer(t, query, dec))
+
+    def _completer(self, ticket: Ticket, query, decision):
+        """Fleet-side completion callback: build the Response off-loop, then
+        settle the ticket's future on the loop thread."""
+        srv, loop = self.server, self._loop
+
+        def cb(fut):
+            try:
+                result, meta = fut.result(0)
+                resp = srv._respond(ticket.request, query, decision, result,
+                                    meta)
+                err = None
+            except Exception as e:  # noqa: BLE001 — surfaced on the ticket
+                resp, err = None, e
+
+            def record():
+                ticket.mark("completed" if err is None else "failed")
+                with self._stats_lock:
+                    if err is None:
+                        self.completed += 1
+                    else:
+                        self.failed += 1
+
+            def settle():
+                record()
+                if not ticket._future.done():
+                    if err is not None:
+                        ticket._future.set_exception(err)
+                    else:
+                        ticket._future.set_result(resp)
+
+            try:
+                loop.call_soon_threadsafe(settle)
+            except RuntimeError:
+                # the loop already closed (the caller abandoned the session
+                # without awaiting this ticket): nothing can observe the
+                # future anymore — record the outcome for telemetry and let
+                # the fleet worker finish cleanly instead of dying here
+                record()
+
+        return cb
+
+    # -- synchronous shim path -----------------------------------------------
+
+    def dispatch_sync(self, reqs) -> list["Response"]:
+        """Dispatch one explicit bucket synchronously: the same
+        one-``select_batch`` + one-fan-out pipeline as the admission loop,
+        but over the blocking ``submit_many`` so callers get responses
+        directly.  ``EcoLLMServer.handle`` / ``handle_batch`` are thin
+        wrappers over this — a single request is simply a bucket of one."""
+        reqs = list(reqs)
+        if not reqs:
+            return []
+        with self._stats_lock:
+            self.admitted += len(reqs)
+            self.batches += 1
+            self.dispatched += len(reqs)
+        try:
+            resolved, decisions, jobs = self._select(reqs)
+            outcomes = self.server.fleet.submit_many(jobs, hedge=self.hedge)
+        except Exception:
+            with self._stats_lock:  # keep completed + failed == dispatched
+                self.failed += len(reqs)
+            raise
+        with self._stats_lock:
+            self.completed += len(reqs)
+        return [self.server._respond(req, query, d, result, meta)
+                for req, (query, _), d, (result, meta)
+                in zip(reqs, resolved, decisions, outcomes)]
+
+    # -- telemetry -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Admission counters + queue depth in one consistent observation."""
+        with self._stats_lock:
+            return {
+                "admitted": self.admitted,
+                "shed": self.shed_count,
+                "deadline_shed": self.deadline_shed_count,
+                "batches": self.batches,
+                "dispatched": self.dispatched,
+                "completed": self.completed,
+                "failed": self.failed,
+                "queue_depth": self._queue.qsize(),
+                "max_batch": self.max_batch,
+                "max_queue": self.max_queue,
+            }

@@ -5,6 +5,12 @@ chosen resolution path on the fleet -> response with full decision telemetry
 (build id, selected path, selection overhead, SLO verdict).  Mirrors the
 paper's server extensions: build identifiers, SLO specification parameters,
 system state reporting.
+
+The serving surface is the asyncio ``Orchestrator``
+(``repro.runtime.orchestrator``): ``submit()`` with per-request SLO /
+priority / deadline, micro-batched admission over the fused selector, and
+bounded-queue load shedding.  ``handle`` / ``handle_batch`` remain as
+synchronous compatibility shims routed through the same dispatch pipeline.
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ from repro.core.rps import RuntimePathSelector
 from repro.core.slo import SLO, SLOTracker
 from repro.core.text import embed_text
 from repro.runtime.fleet import Replica, ReplicaFleet
+from repro.runtime.orchestrator import Orchestrator
 
 
 @dataclass
@@ -34,14 +41,22 @@ class Request:
 
 @dataclass
 class Response:
+    """Serving result + decision telemetry.
+
+    Overhead contract: every response carries BOTH selection-overhead
+    figures, whether it was served alone or in a batch — a single request is
+    simply a bucket of one.  ``selection_overhead_s`` is the amortized
+    per-query share of the selection pass (``Decision.overhead_s``);
+    ``meta["batch_overhead_s"]`` is the full wall-clock of the pass that
+    produced the decision (``Decision.batch_overhead_s``) and equals
+    ``selection_overhead_s`` when the bucket had one request.
+    """
+
     text: str
     accuracy: float  # judge score (benchmark mode; NaN in open serving)
     latency_s: float
     cost_usd: float
     path_key: str
-    # amortized per-query selection overhead (Decision.overhead_s).  For
-    # batch-selected responses the full selection-pass wall-clock is in
-    # meta["batch_overhead_s"] (Decision.batch_overhead_s).
     selection_overhead_s: float
     slo_ok: bool
     replica: int
@@ -72,6 +87,22 @@ class EcoLLMServer:
 
         self.fleet = ReplicaFleet(make_replica, n=n_replicas, seed=seed,
                                   max_workers=max_workers)
+        self._orchestrator: Optional[Orchestrator] = None
+        self._orch_lock = threading.Lock()
+
+    def orchestrator(self, **kwargs) -> Orchestrator:
+        """The async serving front-end bound to this server, created lazily
+        (the ``handle``/``handle_batch`` shims create it with defaults, but
+        their synchronous path is admission-policy-free).  Admission kwargs
+        (``max_batch``, ``max_wait_ms``, ``max_queue``, ``hedge``)
+        reconfigure the instance — allowed any time its admission loop is
+        not running, so a warmup ``handle()`` never pins the policy."""
+        with self._orch_lock:
+            if self._orchestrator is None:
+                self._orchestrator = Orchestrator(self, **kwargs)
+            elif kwargs:
+                self._orchestrator.reconfigure(**kwargs)
+            return self._orchestrator
 
     def _execute(self, job):
         query, path = job
@@ -122,39 +153,55 @@ class EcoLLMServer:
         )
 
     def handle(self, req: Request) -> Response:
-        query, emb = self._resolve_query(req)
-        decision = self.rps.select(emb, req.slo)
-        result, meta = self.fleet.submit((query, decision.path))
-        return self._respond(req, query, decision, result, meta)
+        """Compatibility shim (pre-orchestrator API): dispatches ``req`` as
+        a bucket of one through the orchestrator's synchronous path — one
+        ``select_batch`` pass of size 1, then the blocking fleet fan-out.
+        New code should ``await Orchestrator.submit`` instead."""
+        return self.orchestrator().dispatch_sync([req])[0]
 
     def handle_batch(self, reqs: list[Request]) -> list[Response]:
-        """Batch entry point: one vectorized RPS pass selects paths for the
-        whole batch, then the fleet executes the chosen paths."""
+        """Compatibility shim (pre-orchestrator API): dispatches ``reqs`` as
+        one explicit bucket through the orchestrator — one vectorized RPS
+        pass, one fleet fan-out.  New code should ``await
+        Orchestrator.submit`` per request and let micro-batched admission
+        coalesce them."""
         if not reqs:
             return []
-        resolved = [self._resolve_query(r) for r in reqs]
-        embs = np.stack([emb for _, emb in resolved])
-        decisions = self.rps.select_batch(embs, [r.slo for r in reqs])
-        jobs = [(query, d.path) for (query, _), d in zip(resolved, decisions)]
-        outcomes = self.fleet.submit_many(jobs)
-        return [self._respond(req, query, d, result, meta)
-                for req, (query, _), d, (result, meta)
-                in zip(reqs, resolved, decisions, outcomes)]
+        return self.orchestrator().dispatch_sync(reqs)
 
     def system_state(self) -> dict:
+        # fleet counters/gauges come from one snapshot (single lock
+        # acquisition) so they are mutually consistent — field-by-field
+        # reads could interleave with completions and tear the invariant
+        # `counters == sum(per-request meta)`
+        fleet = self.fleet.snapshot()
+        with self._embed_lock:
+            embed = {"hits": self.embed_cache_hits,
+                     "misses": self.embed_cache_misses}
+        with self._orch_lock:
+            orch = self._orchestrator
+        # fromkeys instead of a literal dict: can't drift from the key set
+        # this method consumes below when Orchestrator.stats() grows
+        admission = (orch.stats() if orch is not None else dict.fromkeys(
+            ("queue_depth", "shed", "deadline_shed", "admitted", "batches"),
+            0))
         return {
-            "replicas": len(self.fleet.live()),
-            "hedges": self.fleet.hedge_count,
-            "failovers": self.fleet.failover_count,
-            "requeues": self.fleet.requeue_count,
-            "cancelled": self.fleet.cancelled_count,
-            "queue_depth": self.fleet.queue_depth(),
-            "in_flight": self.fleet.in_flight(),
+            "replicas": fleet["replicas"],
+            "hedges": fleet["hedges"],
+            "failovers": fleet["failovers"],
+            "requeues": fleet["requeues"],
+            "cancelled": fleet["cancelled"],
+            "queue_depth": fleet["queue_depth"],
+            "in_flight": fleet["in_flight"],
+            "admission_queue_depth": admission["queue_depth"],
+            "shed": admission["shed"],
+            "deadline_shed": admission["deadline_shed"],
+            "admitted": admission["admitted"],
+            "dispatch_batches": admission["batches"],
             "slo_violation_rate": self.tracker.violation_rate,
             "slo_latency_violation_rate": self.tracker.latency_violation_rate,
             "slo_cost_violation_rate": self.tracker.cost_violation_rate,
             "requests": self.tracker.total,
             "rps_engine": "kernel" if self.rps.use_kernel else "numpy",
-            "embed_cache": {"hits": self.embed_cache_hits,
-                            "misses": self.embed_cache_misses},
+            "embed_cache": embed,
         }

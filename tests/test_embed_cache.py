@@ -1,0 +1,92 @@
+"""Open-world prompt embedding LRU (`EcoLLMServer._embed_prompt`):
+eviction order, capacity bound, and exact hit/miss accounting under
+concurrent `_resolve_query` calls — previously only exercised incidentally
+through serving tests."""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core.text import embed_text
+from repro.runtime.server import EcoLLMServer, Request
+
+
+class _MiniDomain:
+    """Just enough DomainData surface for `_resolve_query`."""
+
+    def __init__(self, n=4, d=512, seed=0):
+        rng = np.random.default_rng(seed)
+        embs = rng.normal(size=(n, d)).astype(np.float32)
+        self.query_embeddings = embs / np.linalg.norm(embs, axis=1,
+                                                      keepdims=True)
+        self.queries = [f"known-query-{i}" for i in range(n)]
+
+
+def _server(**kw):
+    # rps/executor are never touched by the embed-cache paths under test
+    return EcoLLMServer(_MiniDomain(), rps=None, executor=None,
+                        n_replicas=1, max_workers=1, **kw)
+
+
+def test_lru_eviction_order_and_counters():
+    srv = _server()
+    srv.EMBED_CACHE_MAX = 2  # instance override shadows the class attr
+
+    srv._embed_prompt("alpha")   # miss -> [alpha]
+    srv._embed_prompt("beta")    # miss -> [alpha, beta]
+    srv._embed_prompt("alpha")   # hit  -> [beta, alpha] (alpha now MRU)
+    srv._embed_prompt("gamma")   # miss -> evicts beta (LRU), not alpha
+    assert set(srv._embed_cache) == {"alpha", "gamma"}
+    assert srv.embed_cache_hits == 1
+    assert srv.embed_cache_misses == 3
+
+    srv._embed_prompt("beta")    # miss again: beta was evicted -> drops alpha
+    assert set(srv._embed_cache) == {"gamma", "beta"}
+    assert srv.embed_cache_misses == 4
+    assert len(srv._embed_cache) <= srv.EMBED_CACHE_MAX
+
+
+def test_embed_values_stable_across_hits():
+    srv = _server()
+    first = srv._embed_prompt("how do I reset the thermostat?")
+    again = srv._embed_prompt("how do I reset the thermostat?")
+    assert again is first  # the cached object itself, not a recompute
+    np.testing.assert_array_equal(
+        first, embed_text("how do I reset the thermostat?"))
+
+
+def test_concurrent_resolve_query_exact_accounting():
+    """Hammer `_resolve_query` from many threads over a small prompt set:
+    every call increments exactly one counter (hits + misses == calls), the
+    cache stays within its bound, and resolution is correct throughout."""
+    srv = _server()
+    prompts = [f"prompt number {i} with some words" for i in range(10)]
+    n_threads, per_thread = 8, 50
+    expected = {p: embed_text(p) for p in prompts}
+    expected_qid = {
+        p: int(np.argmax(srv.domain.query_embeddings @ expected[p]))
+        for p in prompts}
+    start = threading.Barrier(n_threads)
+    failures = []
+
+    def worker(tid):
+        start.wait()
+        rng = np.random.default_rng(tid)
+        for _ in range(per_thread):
+            p = prompts[int(rng.integers(len(prompts)))]
+            query, emb = srv._resolve_query(Request(prompt=p))
+            if not np.array_equal(emb, expected[p]):
+                failures.append(f"bad embedding for {p!r}")
+            if query != srv.domain.queries[expected_qid[p]]:
+                failures.append(f"bad OOD resolution for {p!r}")
+
+    with ThreadPoolExecutor(n_threads) as pool:
+        list(pool.map(worker, range(n_threads)))
+
+    assert not failures
+    total = n_threads * per_thread
+    assert srv.embed_cache_hits + srv.embed_cache_misses == total
+    # every distinct prompt misses at least once; concurrent first touches
+    # may each count a miss (setdefault keeps one winner), never a loss
+    assert len(prompts) <= srv.embed_cache_misses <= total
+    assert len(srv._embed_cache) == len(prompts) <= srv.EMBED_CACHE_MAX

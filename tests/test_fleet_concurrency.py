@@ -196,6 +196,96 @@ def test_submit_many_stress_no_request_lost_or_double_counted():
     fleet.close()
 
 
+def test_submit_many_async_matches_blocking_results():
+    """The non-blocking fan-out delivers the same (result, meta) surface as
+    `submit_many`, pushes completion through callbacks, and leaves the fleet
+    drained."""
+    fleet = ReplicaFleet(_ok_replica, n=3, seed=0)
+    fired = []
+    futures = fleet.submit_many_async(list(range(24)))
+    for j, fut in enumerate(futures):
+        fut.add_done_callback(lambda f, j=j: fired.append(j))
+    outs = [fut.result(timeout=5.0) for fut in futures]
+    assert [o for o, _ in outs] == [("ok", j) for j in range(24)]
+    for _, meta in outs:
+        assert {"replica", "latency_s", "attempts", "hedges", "requeues"} \
+            <= set(meta)
+    deadline = time.time() + 5.0
+    while len(fired) < 24 and time.time() < deadline:
+        time.sleep(0.002)
+    assert sorted(fired) == list(range(24))  # every callback fired once
+    assert fleet.queue_depth() == 0 and fleet.in_flight() == 0
+    fleet.close()
+
+
+def test_submit_many_async_callback_after_completion_fires_immediately():
+    fleet = ReplicaFleet(_ok_replica, n=2, seed=0)
+    (fut,) = fleet.submit_many_async(["job"])
+    fut.result(timeout=5.0)  # flight settled
+    fired = []
+    fut.add_done_callback(lambda f: fired.append(f.result(0)))
+    assert fired == [(("ok", "job"), fut.result(0)[1])]
+    fleet.close()
+
+
+def test_submit_many_async_sequential_mode_is_deterministic():
+    """max_workers=1: the async surface runs the same sequential dispatcher
+    — futures come back already complete with identical results, meta, and
+    counters as the blocking call on a twin fleet."""
+    sync_fleet = ReplicaFleet(_ok_replica, n=3, seed=7, max_workers=1)
+    sync_outs = sync_fleet.submit_many(list(range(20)))
+    async_fleet = ReplicaFleet(_ok_replica, n=3, seed=7, max_workers=1)
+    futures = async_fleet.submit_many_async(list(range(20)))
+    assert all(fut.done() for fut in futures)  # completed inline
+    async_outs = [fut.result(0) for fut in futures]
+
+    def norm(outs):  # latency_s is measured wall-clock, not deterministic
+        return [(o, {k: v for k, v in m.items() if k != "latency_s"})
+                for o, m in outs]
+
+    assert norm(async_outs) == norm(sync_outs)
+    assert (async_fleet.hedge_count, async_fleet.failover_count) \
+        == (sync_fleet.hedge_count, sync_fleet.failover_count)
+    sync_fleet.close()
+    async_fleet.close()
+
+
+def test_submit_many_async_surfaces_failures_via_future():
+    """Both dispatcher modes surface an execution failure through the future
+    with the SAME error shape: one 'failed after retries' wrapper around the
+    original exception, never a double wrap."""
+    def make(rid):
+        def execute(job):
+            raise ValueError("always fails")
+        return Replica(rid=rid, execute=execute, fail_rate=0.0)
+
+    for max_workers in (None, 1):  # threaded and sequential modes
+        fleet = ReplicaFleet(make, n=2, seed=0, max_workers=max_workers)
+        (fut,) = fleet.submit_many_async(["job"], hedge=False)
+        with pytest.raises(RuntimeError, match="failed after retries") as ei:
+            fut.result(timeout=5.0)
+        assert str(ei.value).count("failed after retries") == 1
+        assert "always fails" in str(ei.value)
+        fleet.close()
+
+
+def test_snapshot_is_consistent_and_matches_fields_at_quiescence():
+    fleet = ReplicaFleet(_ok_replica, n=3, seed=1)
+    fleet.submit_many(list(range(30)))
+    snap = fleet.snapshot()
+    assert snap == {
+        "replicas": len(fleet.live()),
+        "hedges": fleet.hedge_count,
+        "failovers": fleet.failover_count,
+        "requeues": fleet.requeue_count,
+        "cancelled": fleet.cancelled_count,
+        "queue_depth": fleet.queue_depth(),
+        "in_flight": fleet.in_flight(),
+    }
+    assert snap["queue_depth"] == 0 and snap["in_flight"] == 0
+    fleet.close()
+
+
 def test_server_embed_memo_hits_on_repeated_prompt(monkeypatch):
     """`EcoLLMServer._resolve_query` memoizes open-world prompt embeddings."""
     from repro.launch.serve import build_server

@@ -157,6 +157,36 @@ def test_float_tie_at_knn_boundary_is_deterministic():
     np.testing.assert_allclose(results[0], results[1], atol=1e-6)
 
 
+def test_bucketed_jit_no_retrace_within_bucket(rig):
+    """Shape-bucketed jit caching: batch sizes padded to the same
+    power-of-two bucket share a single trace of the fused pass, and the
+    pad rows never leak into decisions (row-for-row parity with numpy)."""
+    dom, *_, test_idx = rig
+    rps_np = _selector(rig)
+    rps_k = _selector(rig, use_kernel=True)
+    embs = dom.query_embeddings[test_idx]
+
+    def slos(n):
+        return [MIXED_SLOS[i % len(MIXED_SLOS)] for i in range(n)]
+
+    outs = {}
+    outs[5] = rps_k.select_batch(embs[:5], slos(5))
+    assert rps_k.kernel_trace_count == 1
+    outs[7] = rps_k.select_batch(embs[:7], slos(7))
+    assert rps_k.kernel_trace_count == 1  # 5 and 7 share the 8-bucket
+    outs[9] = rps_k.select_batch(embs[:9], slos(9))
+    assert rps_k.kernel_trace_count == 2  # new 16-bucket: one retrace
+    outs[12] = rps_k.select_batch(embs[:12], slos(12))
+    assert rps_k.kernel_trace_count == 2  # 9 and 12 share the 16-bucket
+
+    for B, fused in outs.items():
+        assert len(fused) == B
+        ref = rps_np.select_batch(embs[:B], slos(B))
+        for a, b in zip(ref, fused):
+            assert (a.path.key, a.set_id, a.used_fallback) \
+                == (b.path.key, b.set_id, b.used_fallback)
+
+
 def test_handle_batch_kernel_server_matches_singles(rig):
     """EcoLLMServer.handle_batch over a use_kernel RPS serves the same paths
     and SLO verdicts as per-request handle()."""
