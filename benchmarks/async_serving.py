@@ -40,6 +40,8 @@ import numpy as np
 from repro.core.rps import bucket_batch
 from repro.core.slo import SLO
 from repro.launch.serve import build_server
+
+from benchmarks import reporting
 from repro.runtime.orchestrator import Orchestrator, Overloaded
 from repro.runtime.server import Request
 
@@ -192,21 +194,27 @@ def render(r: Result) -> str:
     ])
 
 
-def main() -> None:
-    r = run()
+def main(argv=None) -> None:
+    smoke = reporting.smoke_flag(argv)
+    r = run(n_requests=96) if smoke else run()
     print(render(r))
-    assert r.n >= 256, "benchmark below gated scale"
-    # micro-batched admission must never lose to the per-query baseline on
-    # p50 at equal offered load — even on a 2-core CPU host (the expected
-    # margin under 1.5x overload is several-fold, so no noise allowance)
-    assert r.speedup_p50 >= 1.0, \
-        f"micro-batched p50 only {r.speedup_p50:.2f}x the per-query baseline"
-    assert r.mean_bucket > 1.0, \
-        "admission never coalesced: offered load too low to micro-batch"
-    # shape-bucketed jit: traces bounded by distinct buckets, not sizes
+    # loss accounting (served + shed == offered) is asserted inside run();
+    # the jit-bucket bound also holds at any scale.  --smoke skips the
+    # latency floor and coalescing gate (tiny offered load).
     assert r.kernel_traces <= r.distinct_buckets, \
         f"{r.kernel_traces} traces for {r.distinct_buckets} buckets — " \
         "the fused selector is retracing within a bucket"
+    if not smoke:
+        assert r.n >= 256, "benchmark below gated scale"
+        # micro-batched admission must never lose to the per-query baseline
+        # on p50 at equal offered load — even on a 2-core CPU host (the
+        # expected margin under 1.5x overload is several-fold, so no noise
+        # allowance)
+        assert r.speedup_p50 >= 1.0, \
+            f"micro-batched p50 only {r.speedup_p50:.2f}x the per-query baseline"
+        assert r.mean_bucket > 1.0, \
+            "admission never coalesced: offered load too low to micro-batch"
+    reporting.emit("async_serving", r, smoke=smoke)
 
 
 if __name__ == "__main__":

@@ -18,6 +18,8 @@ from repro.core.domains import build_domain
 from repro.core.emulator import Emulator
 from repro.core.paths import PathSpace
 
+from benchmarks import reporting
+
 
 @dataclass
 class Row:
@@ -37,24 +39,22 @@ def _time_explore(dom, space, qs, budget, batched: bool, seed: int):
     return table, time.perf_counter() - t0
 
 
-def run(n_queries: int = 32, seed: int = 0) -> list[Row]:
+WORKLOADS = [
+    ("smarthome", None, "smarthome exhaustive"),
+    ("iot_security", None, "iot_security exhaustive"),
+    ("smarthome", 3.0, "smarthome budget=3"),
+]
+
+
+def run(n_queries: int = 32, seed: int = 0, workloads=None) -> list[Row]:
     rows: list[Row] = []
-    for dom_name, budget, label in [
-        ("smarthome", None, "smarthome exhaustive"),
-        ("iot_security", None, "iot_security exhaustive"),
-        ("smarthome", 3.0, "smarthome budget=3"),
-    ]:
+    for dom_name, budget, label in (workloads or WORKLOADS):
         dom = build_domain(dom_name, n_queries=n_queries, seed=seed)
         space = PathSpace()
         qs = list(range(n_queries))
         ts, dt_s = _time_explore(dom, space, qs, budget, False, seed)
         tb, dt_b = _time_explore(dom, space, qs, budget, True, seed)
-        exact = (
-            np.array_equal(ts.accuracy, tb.accuracy, equal_nan=True)
-            and np.array_equal(ts.latency, tb.latency, equal_nan=True)
-            and np.array_equal(ts.cost, tb.cost, equal_nan=True)
-            and ts.cache_stats == tb.cache_stats
-        )
+        exact = ts.bit_equal(tb)
         n = tb.cache_stats["evaluations"]
         rows.append(Row(label, n, n / dt_s, n / dt_b, dt_s / dt_b,
                         tb.cache_stats["hit_rate"], exact))
@@ -71,12 +71,16 @@ def render(rows: list[Row]) -> str:
     return "\n".join(lines)
 
 
-def main() -> None:
-    rows = run()
+def main(argv=None) -> None:
+    smoke = reporting.smoke_flag(argv)
+    rows = run(n_queries=8, workloads=WORKLOADS[::2]) if smoke else run()
     print(render(rows))
+    assert all(r.exact_match for r in rows), \
+        "batched explore diverged from the scalar oracle"
     best = max(r.speedup for r in rows)
     print(f"\nbest speedup: {best:.1f}x "
           f"(exhaustive sweeps are the emulator's stage-1 workload)")
+    reporting.emit("batch_speedup", rows, smoke=smoke)
 
 
 if __name__ == "__main__":

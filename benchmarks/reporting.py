@@ -1,0 +1,61 @@
+"""Benchmark result artifacts: one ``BENCH_<name>.json`` per gated run.
+
+Every benchmark ``main()`` calls ``emit(name, result)`` after its gates, so
+CI can upload the JSON as a workflow artifact and the perf trajectory stays
+reconstructible from CI history (PR smoke runs and the nightly full runs
+alike).  ``BENCH_JSON_DIR`` overrides the output directory (defaults to the
+working directory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import sys
+import time
+
+
+def _jsonable(obj):
+    if hasattr(obj, "item"):  # numpy scalars
+        return obj.item()
+    return str(obj)
+
+
+def emit(name: str, result, **extra) -> str:
+    """Write BENCH_<name>.json and return its path.
+
+    ``result`` is a dataclass, a dict, or a list of either (multi-row
+    benchmarks); ``extra`` adds flat fields (e.g. smoke=True).
+    """
+    def rowify(r):
+        return dataclasses.asdict(r) if dataclasses.is_dataclass(r) else dict(r)
+
+    payload = {
+        "benchmark": name,
+        "unix_time": time.time(),
+        "python": platform.python_version(),
+        "argv": sys.argv[1:],
+    }
+    if isinstance(result, (list, tuple)):
+        payload["rows"] = [rowify(r) for r in result]
+    else:
+        payload.update(rowify(result))
+    payload.update(extra)
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=_jsonable)
+    return path
+
+
+def smoke_flag(argv=None) -> bool:
+    """Shared ``--smoke`` CLI contract: tiny sizes, parity gates only, no
+    speedup floors — the PR-time CI mode."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes; assert parity/exactness gates only")
+    return ap.parse_args(argv).smoke

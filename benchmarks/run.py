@@ -110,6 +110,20 @@ def bench_select() -> None:
          f"fallbacks={r.fallback_rows}")
 
 
+def bench_retrieval() -> None:
+    from benchmarks import retrieval_batch_speedup as rb
+
+    t0 = time.time()
+    r = rb.run()
+    print("\n=== Retrieval: per-query search / batched GEMM / device kernel ===")
+    print(rb.render(r))
+    _csv("retrieval_batch_speedup", (time.time() - t0) * 1e6,
+         f"batch={r.speedup_batch:.2f}x;kernel={r.speedup_kernel:.2f}x;"
+         f"ivf={r.ivf_speedup:.2f}x;emu={r.emu_speedup:.2f}x;"
+         f"parity={r.parity_exact and r.parity_ivf and r.emu_exact and r.kernel_ids_match};"
+         f"backend={r.backend}")
+
+
 def bench_fleet() -> None:
     from benchmarks import fleet_throughput as ft
 
@@ -185,6 +199,7 @@ def bench_kernels() -> None:
 
 BENCHES = {
     "batch": bench_batch,
+    "retrieval": bench_retrieval,
     "select": bench_select,
     "serving": bench_serving,
     "fleet": bench_fleet,

@@ -95,36 +95,42 @@ class PipelineExecutor:
             )
         raise KeyError(choice.impl)
 
-    def _query_vec(self, q: Query, st: StageState) -> np.ndarray:
-        if "+sb" in st.query_emb_key:
-            # step-back rewrite: the SLM re-states the query, emphasising its
-            # key entities (real re-embedding of the expanded text)
+    # step-back rewrite (sb=True below): the SLM re-states the query,
+    # emphasising its key entities (real re-embedding of the expanded text)
+    def _search_vec(self, q: Query, sb: bool, hyde: bool) -> np.ndarray:
+        """The float32 search vector for (qid, stepback?, hyde?) — the same
+        value whether resolved by the scalar walk or the cross-query
+        prefetch (one fixed op sequence through the shared embed memos)."""
+        if sb:
             vec = self._sb_cache.get(q.qid)
             if vec is None:
                 vec = self._sb_cache.setdefault(
                     q.qid,
                     embed_text(q.text + " " + q.text + " clarify context specification"))
-            return vec
-        return self.domain.query_embeddings[q.qid]
+        else:
+            vec = self.domain.query_embeddings[q.qid]
+        if hyde:
+            hypo = self._hyde_cache.get(q.qid)
+            if hypo is None:
+                hypo = self._hyde_cache.setdefault(
+                    q.qid,
+                    embed_text(q.text + " " + q.reference.split("fact-")[0]))
+            vec = vec + 0.5 * hypo
+        return vec.astype(np.float32)
 
     def _search(self, q: Query, st: StageState, k: int, hyde: bool):
         """Memoized vector search. The query vector is fully determined by
         (qid, stepback-rewrite?, hyde-blend?), so (qid, sb, hyde, k) is an
         exact identity key — the memo dedups repeated searches across stage
-        prefixes without changing any result."""
+        prefixes without changing any result.  `prefetch_retrieval` fills
+        the same memo from batched `VectorStore.search_batch` passes; the
+        store's bitwise-stability contract keeps either fill path
+        bit-identical."""
         key = (q.qid, "+sb" in st.query_emb_key, hyde, k)
         res = self._search_cache.get(key)
         if res is None:
-            vec = self._query_vec(q, st)
-            if hyde:
-                hypo = self._hyde_cache.get(q.qid)
-                if hypo is None:
-                    hypo = self._hyde_cache.setdefault(
-                        q.qid,
-                        embed_text(q.text + " " + q.reference.split("fact-")[0]))
-                vec = vec + 0.5 * hypo
-            res = self._search_cache.setdefault(
-                key, self.store.search(vec.astype(np.float32), k))
+            vec = self._search_vec(q, "+sb" in st.query_emb_key, hyde)
+            res = self._search_cache.setdefault(key, self.store.search(vec, k))
         return res
 
     def run_retrieval(self, q: Query, choice: ComponentChoice, st: StageState) -> StageState:
@@ -273,6 +279,13 @@ class BatchedPipelineExecutor:
     produce the prefix states, every vectorized float64 expression mirrors
     the scalar order of operations, and the judge noise hashes the same
     ``seed:qid:path.key`` strings through blake2b.
+
+    ``prefetch_retrieval`` extends the same contract ACROSS queries: the
+    retrieval stage's vector searches for a whole query block are resolved
+    in batched ``VectorStore.search_batch`` passes (one GEMM per distinct
+    top-k width) and installed in the scalar search memo, which the stage
+    functions then hit — bit-identical results via the store's
+    bitwise-stable batched-search contract (core/retrieval.py).
     """
 
     def __init__(self, scalar: PipelineExecutor, paths: Sequence[Path]):
@@ -347,6 +360,49 @@ class BatchedPipelineExecutor:
         self._all_s1 = np.arange(len(self.s1_suffix))
         self._all_s2 = np.arange(len(self.s2_suffix))
         self._all_s3 = np.arange(len(self.s3_suffix))
+
+    # -- cross-query retrieval prefetch --------------------------------------
+
+    def prefetch_retrieval(self, pairs: Sequence[tuple[Query, np.ndarray]]
+                           ) -> dict:
+        """Resolve the retrieval stage for a block of queries in batched
+        `VectorStore.search_batch` passes instead of one GEMV per query.
+
+        ``pairs`` is [(query, path-index block), ...]; for every distinct
+        retrieval slot each query's block touches, the (qid, sb, hyde, k)
+        search the scalar walk would run is grouped by (hyde-agnostic) k
+        and resolved as ONE ``(Bq, d) @ (d, n)`` pass, then installed in
+        the scalar executor's search memo via the same atomic setdefault.
+        The store's bitwise-stability contract (see core/retrieval.py)
+        makes the memo entries bit-identical to per-query ``search`` calls,
+        so cache-stat and result parity with the scalar oracle survive.
+
+        Returns {"searches": memo entries filled, "passes": batched calls}.
+        """
+        ex = self.scalar
+        need: dict[int, list[tuple[tuple, np.ndarray]]] = {}
+        queued: set[tuple] = set()
+        for q, js in pairs:
+            js = np.asarray(js, np.int64)
+            for s in np.unique(self.path_s2[js]):
+                choice = self.s2_choice[s]
+                if choice.impl == "null":
+                    continue
+                sb = self.s1_choice[self.s2_parent[s]].impl == "stepback"
+                hyde = choice.impl == "hyde"
+                k = int(choice.param("top_k", 4))
+                key = (q.qid, sb, hyde, k)
+                if key in queued or ex._search_cache.get(key) is not None:
+                    continue
+                queued.add(key)
+                need.setdefault(k, []).append((key, ex._search_vec(q, sb, hyde)))
+        filled = 0
+        for k, entries in sorted(need.items()):
+            block = np.stack([vec for _, vec in entries])
+            for (key, _), res in zip(entries, ex.store.search_batch(block, k)):
+                if ex._search_cache.setdefault(key, res) is res:
+                    filled += 1
+        return {"searches": filled, "passes": len(need)}
 
     # -- stage resolution ----------------------------------------------------
 

@@ -1,0 +1,1 @@
+from repro.kernels.retrieval_topk.ops import retrieval_topk  # noqa: F401

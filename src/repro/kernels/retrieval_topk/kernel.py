@@ -1,0 +1,78 @@
+"""Batched retrieval top-k Pallas TPU kernel (stub: validated in interpret).
+
+The emulator's retrieval stage is one similarity GEMM plus a top-k per
+query; on TPU the corpus block fits VMEM for the domain scale this repo
+targets (1-2k chunks x 512 dims ~ 4 MB), so the whole stage fuses into a
+single kernel: one grid step per query block, corpus resident, k unrolled
+extract-max steps (the same pattern as ``kernels/dsqe_score``).
+
+Tie semantics: ``jnp.argmax`` picks the FIRST maximum, so exactly tied
+scores admit the lowest corpus id — identical to the ref oracle's
+``lax.top_k`` and to the host ``VectorStore`` composite-key tie-break.
+
+This is a functional stub compiled only under ``interpret=True`` in tests
+(CPU/GPU dispatch uses the XLA ref); the blocking is TPU-shaped (lane dim
+128) so it can be promoted to a compiled path unchanged once a TPU target
+is wired up.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.retrieval_topk.ref import NEG_INF
+
+
+def _topk_kernel(q_ref, corpus_ref, vals_ref, ids_ref, *, k: int, n_valid: int):
+    q = q_ref[...]  # (block_q, d)
+    c = corpus_ref[...]  # (n, d)
+    s = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())))  # (block_q, n)
+    iota = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(iota < n_valid, s, NEG_INF)  # padded corpus rows never win
+    vals, ids = [], []
+    for _ in range(k):
+        m = jnp.max(s, axis=1)  # (block_q,)
+        a = jnp.argmax(s, axis=1)  # first max -> lowest id on exact ties
+        vals.append(m)
+        ids.append(a.astype(jnp.int32))
+        s = jnp.where(iota == a[:, None], NEG_INF, s)
+    vals_ref[...] = jnp.stack(vals, axis=1)
+    ids_ref[...] = jnp.stack(ids, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_q", "interpret", "n_valid"))
+def retrieval_topk_kernel(
+    q: jax.Array,  # (Bq, d) query block
+    corpus: jax.Array,  # (n, d) chunk embeddings, VMEM resident
+    *,
+    k: int,
+    block_q: int = 128,
+    interpret: bool = False,
+    n_valid: int = 0,
+):
+    Bq, d = q.shape
+    block_q = min(block_q, Bq)
+    assert Bq % block_q == 0
+    n = corpus.shape[0]
+    kernel = functools.partial(_topk_kernel, k=k, n_valid=n_valid or n)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bq // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bq, k), jnp.float32),
+            jax.ShapeDtypeStruct((Bq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, corpus)

@@ -1,0 +1,284 @@
+"""Cross-query batched retrieval: bitwise parity, edge cases, device path.
+
+`VectorStore.search_batch` carries a bitwise-stability contract with the
+per-query `search` oracle (canonical gathered-GEMV scores, composite
+lowest-id tie-break — see the core/retrieval.py module docstring); these
+tests pin the contract on the flat and IVF paths, the explicit edge-case
+semantics, the cross-query prefetch through the emulator (result AND
+prefix-cache stat parity), and the device kernel's decision-level parity.
+"""
+import numpy as np
+import pytest
+
+from repro.core.domains import build_domain
+from repro.core.emulator import Emulator
+from repro.core.paths import PathSpace
+from repro.core.retrieval import SearchResult, VectorStore, _order_keys
+
+
+def _corpus(n=512, d=64, seed=0):
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((n, d)).astype(np.float32)
+    return emb / np.linalg.norm(emb, axis=1, keepdims=True)
+
+
+def _queries(b, d=64, seed=1):
+    return np.random.default_rng(seed).standard_normal((b, d)).astype(np.float32)
+
+
+def _assert_rows_equal(scalar: SearchResult, batched: SearchResult):
+    assert np.array_equal(scalar.ids, batched.ids)
+    # scores must share the exact bit pattern, not just be close
+    assert np.array_equal(
+        scalar.scores.view(np.uint32), batched.scores.view(np.uint32))
+
+
+# -- bitwise parity ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_clusters,nprobe", [(0, 4), (16, 1), (16, 3), (16, 16)])
+@pytest.mark.parametrize("k", [1, 5, 64])
+def test_search_batch_bitwise_parity(n_clusters, nprobe, k):
+    store = VectorStore(_corpus(), n_clusters=n_clusters, seed=0)
+    Q = _queries(37)
+    batch = store.search_batch(Q, k, nprobe=nprobe)
+    assert len(batch) == len(Q)
+    for q, b in zip(Q, batch):
+        _assert_rows_equal(store.search(q, k, nprobe=nprobe), b)
+        assert len(set(b.ids.tolist())) == len(b.ids)  # never duplicates
+
+
+def test_search_batch_parity_on_domain_embeddings():
+    """Real corpus embeddings at emulator scale, every top_k in the space."""
+    dom = build_domain("agriculture", n_queries=12, seed=2)
+    store = VectorStore(dom.chunk_embeddings)
+    Q = dom.query_embeddings[:12].astype(np.float32)
+    for k in (2, 8, 16):
+        for q, b in zip(Q, store.search_batch(Q, k)):
+            _assert_rows_equal(store.search(q, k), b)
+
+
+def test_exact_tie_breaks_by_lowest_id():
+    emb = _corpus()
+    emb[40] = emb[3]
+    emb[200] = emb[3]  # three identical chunks
+    store = VectorStore(emb)
+    r = store.search(emb[3], 3)
+    assert list(r.ids) == [3, 40, 200]
+    rb = store.search_batch(np.stack([emb[3], emb[3]]), 3)
+    for b in rb:
+        assert list(b.ids) == [3, 40, 200]
+
+
+def test_boundary_tie_group_wider_than_prefilter_band():
+    """A tie group spanning past the 2k candidate band must still resolve
+    to the lowest ids (the band widens to the full row)."""
+    emb = np.zeros((64, 8), np.float32)
+    emb[:, 0] = 1.0  # every chunk identical -> all scores tie
+    q = np.zeros(8, np.float32)
+    q[0] = 1.0
+    store = VectorStore(emb)
+    r = store.search(q, 5)
+    assert list(r.ids) == [0, 1, 2, 3, 4]
+    for b in store.search_batch(np.stack([q, q, q]), 5):
+        assert list(b.ids) == [0, 1, 2, 3, 4]
+
+
+def test_order_keys_monotone_across_signs():
+    scores = np.array([-2.0, -0.5, 0.0, 0.5, 2.0], np.float32)
+    ids = np.zeros(5, np.int64)
+    keys = _order_keys(scores, ids)
+    assert list(np.argsort(keys)) == [0, 1, 2, 3, 4]
+    # same score, different id: lower id -> bigger key
+    k2 = _order_keys(np.array([1.0, 1.0], np.float32), np.array([3, 7]))
+    assert k2[0] > k2[1]
+
+
+def test_signed_zero_scores_tie_by_lowest_id():
+    """+0.0 == -0.0 numerically, so mixed-sign zero scores must still
+    tie-break by lowest chunk id, not by sign bit."""
+    k = _order_keys(np.array([0.0, -0.0], np.float32), np.array([5, 2]))
+    assert k[1] > k[0]  # id 2 outranks id 5 despite the -0.0 bit pattern
+    emb = np.zeros((8, 4), np.float32)
+    emb[:, 0] = [-1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0]
+    q = np.zeros(4, np.float32)
+    q[1] = 1.0  # orthogonal: every dot is an exact +/-0.0
+    store = VectorStore(emb)
+    r = store.search(q, 4)
+    assert list(r.ids) == [0, 1, 2, 3]
+    [b] = store.search_batch(q[None], 4)
+    _assert_rows_equal(r, b)
+
+
+# -- explicit edge-case semantics ------------------------------------------
+
+
+def test_k_exceeding_corpus_clamps_to_n():
+    store = VectorStore(_corpus(n=10))
+    r = store.search(_queries(1)[0], 50)
+    assert r.ids.size == 10 and len(set(r.ids.tolist())) == 10
+    [b] = store.search_batch(_queries(1), 50)
+    _assert_rows_equal(r, b)
+
+
+def test_nonpositive_k_returns_empty():
+    store = VectorStore(_corpus(n=10))
+    for k in (0, -3):
+        r = store.search(_queries(1)[0], k)
+        assert r.ids.size == 0 and r.scores.size == 0
+
+
+def test_empty_probe_union_falls_back_to_full_scan():
+    emb = _corpus()
+    ivf = VectorStore(emb, n_clusters=8, seed=0)
+    ivf.ivf["lists"] = [np.empty(0, np.int64)] * 8  # every list empty
+    flat = VectorStore(emb)
+    Q = _queries(5)
+    for q, b in zip(Q, ivf.search_batch(Q, 7)):
+        _assert_rows_equal(flat.search(q, 7), b)
+        _assert_rows_equal(ivf.search(q, 7), b)
+
+
+def test_nonpositive_nprobe_falls_back_to_full_scan():
+    emb = _corpus()
+    ivf = VectorStore(emb, n_clusters=8, seed=0)
+    flat = VectorStore(emb)
+    q = _queries(1)[0]
+    _assert_rows_equal(flat.search(q, 6), ivf.search(q, 6, nprobe=0))
+
+
+def test_ivf_returns_fewer_than_k_when_lists_are_small():
+    emb = _corpus(n=64)
+    ivf = VectorStore(emb, n_clusters=8, seed=0)
+    ivf.ivf["lists"] = [np.arange(c * 8, c * 8 + 2) for c in range(8)]
+    [b] = ivf.search_batch(_queries(1), 20, nprobe=2)
+    assert 0 < b.ids.size <= 4  # two probed lists x 2 members
+    _assert_rows_equal(ivf.search(_queries(1)[0], 20, nprobe=2), b)
+
+
+def test_duplicate_candidate_ids_across_probed_lists():
+    emb = _corpus()
+    ivf = VectorStore(emb, n_clusters=8, seed=0)
+    for c in range(8):  # same ids injected into EVERY list
+        ivf.ivf["lists"][c] = np.concatenate(
+            [ivf.ivf["lists"][c], np.array([5, 9, 5])])
+    Q = _queries(9)
+    for q, b in zip(Q, ivf.search_batch(Q, 6, nprobe=3)):
+        assert len(set(b.ids.tolist())) == len(b.ids)
+        _assert_rows_equal(ivf.search(q, 6, nprobe=3), b)
+
+
+def test_oversized_corpus_rejected():
+    with pytest.raises(ValueError, match="composite-key id space"):
+        VectorStore(np.zeros((1 << 21, 4), np.float32))
+
+
+# -- cross-query prefetch through the emulator ------------------------------
+
+
+@pytest.fixture(scope="module")
+def domain():
+    return build_domain("smarthome", n_queries=16, seed=5)
+
+
+@pytest.fixture(scope="module")
+def space():
+    return PathSpace()
+
+
+@pytest.mark.parametrize("budget", [None, 3.0])
+def test_explore_prefetch_bitwise_and_stat_parity(domain, space, budget):
+    qs = list(range(12))
+    t_off = Emulator(domain, space, seed=5).explore(
+        qs, budget=budget, batched=True, prefetch=False)
+    t_on = Emulator(domain, space, seed=5).explore(
+        qs, budget=budget, batched=True, prefetch=True)
+    t_scalar = Emulator(domain, space, seed=5).explore(
+        qs, budget=budget, batched=False)
+    assert t_off.bit_equal(t_on)
+    assert t_scalar.bit_equal(t_on)
+
+
+def test_prefetch_resolves_stage_searches_in_batched_passes(domain, space):
+    """After prefetch, the sweep's retrieval-stage searches all hit the
+    memo: `VectorStore.search` runs only for corrective-rag re-searches."""
+    calls = {"search": 0, "batch": 0}
+    emu = Emulator(domain, space, seed=5)
+    store = emu.exec.store
+    orig_search, orig_batch = store.search, store.search_batch
+
+    def counting_search(*a, **kw):
+        calls["search"] += 1
+        return orig_search(*a, **kw)
+
+    def counting_batch(*a, **kw):
+        calls["batch"] += 1
+        return orig_batch(*a, **kw)
+
+    store.search, store.search_batch = counting_search, counting_batch
+    try:
+        emu.explore(list(range(8)), budget=None, batched=True)
+    finally:
+        store.search, store.search_batch = orig_search, orig_batch
+    assert calls["batch"] >= 1  # cross-query passes actually happened
+    # per-query searches only remain for state-dependent corrective-rag
+    # re-searches (k = 2*max(4, len(retrieved)) keys are not prefetchable);
+    # the s2-level (qid, sb, hyde, top_k) searches must all be memo hits
+    s2_keys = {key for key in emu.exec._search_cache
+               if key[3] in (2, 8)}  # the space's top_k values
+    assert calls["search"] < len(s2_keys), \
+        f"{calls['search']} scalar searches for {len(s2_keys)} stage configs"
+
+
+def test_prefetch_retrieval_counts_and_idempotence(domain, space):
+    emu = Emulator(domain, space, seed=5)
+    qs = [domain.queries[i] for i in range(6)]
+    js = np.arange(len(space.paths))
+    stats = emu.batched.prefetch_retrieval([(q, js) for q in qs])
+    assert stats["searches"] > 0 and stats["passes"] >= 1
+    again = emu.batched.prefetch_retrieval([(q, js) for q in qs])
+    assert again == {"searches": 0, "passes": 0}  # memo already warm
+
+
+# -- device path ------------------------------------------------------------
+
+
+def test_kernel_interpret_matches_ref():
+    import jax.numpy as jnp
+
+    from repro.kernels.retrieval_topk import retrieval_topk
+    from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
+
+    emb = _corpus(n=300, d=200, seed=3)
+    emb[50] = emb[3]  # exact tie
+    Q = _queries(17, d=200, seed=4)
+    Q[0] = emb[3]
+    v1, i1 = retrieval_topk(jnp.asarray(Q), jnp.asarray(emb), k=6, interpret=True)
+    v2, i2 = retrieval_topk_ref(jnp.asarray(Q), jnp.asarray(emb), k=6)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5)
+    assert list(np.asarray(i1)[0][:2]) == [3, 50]  # lowest-id tie-break
+
+
+def test_device_path_decision_parity():
+    """`use_kernel=True` must agree with the host path on ids wherever
+    scores are separated beyond float32 noise; exactly-representable
+    integer embeddings make the sums exact, so ties must agree too."""
+    rng = np.random.default_rng(6)
+    emb = rng.integers(-3, 4, (128, 32)).astype(np.float32)
+    emb[64] = emb[10]  # exact tie with exact arithmetic
+    Q = rng.integers(-3, 4, (21, 32)).astype(np.float32)
+    Q[0] = emb[10]
+    store = VectorStore(emb)
+    host = store.search_batch(Q, 7)
+    dev = store.search_batch(Q, 7, use_kernel=True)
+    for h, d in zip(host, dev):
+        assert np.array_equal(h.ids, d.ids)
+        assert np.array_equal(h.scores, d.scores)  # exact sums -> exact parity
+    assert {10, 64}.issubset(set(dev[0].ids[:2].tolist()))
+
+
+def test_device_path_k_clamp():
+    store = VectorStore(_corpus(n=20))
+    [b] = store.search_batch(_queries(1), 50, use_kernel=True)
+    assert b.ids.size == 20
