@@ -21,10 +21,19 @@ both, shed counts, mean bucket size, and the fused selector's jit trace
 count (shape-bucketed caching: traces are bounded by distinct power-of-two
 buckets, not distinct batch sizes).
 
+Streaming is on (the orchestrator default): every ticket is consumed as an
+async chunk iterator alongside the awaited Response, and the report adds
+time-to-first-chunk (arrival -> first streamed chunk) and inter-chunk gap
+percentiles.
+
 Gating: the orchestrator must be no slower than the per-query baseline on
 p50 at equal offered load (it is typically many times faster, even on a
 2-core CPU host), nothing may be lost (served + shed == offered), and the
-bucketed selector must not retrace within a bucket.
+bucketed selector must not retrace within a bucket.  Streaming gates:
+time-to-first-chunk p50 <= the full-response p50 on the same tickets (smoke
+and full — first bytes must beat the finished response), and in the full
+run TTFC p50 must also beat the non-streaming baseline's p50 while the
+inter-chunk p95 stays under it (chunks arrive faster than whole responses).
 
   PYTHONPATH=src python -m benchmarks.async_serving
 """
@@ -72,6 +81,12 @@ class Result:
     mean_bucket: float
     kernel_traces: int
     distinct_buckets: int
+    # streaming telemetry (arrival-relative, like the latency percentiles)
+    ttfc_p50_ms: float       # arrival -> first streamed chunk
+    ttfc_p95_ms: float
+    inter_chunk_p95_ms: float  # gap between consecutive chunk arrivals
+    chunks_total: int
+    streamed: int            # served tickets that delivered >= 1 chunk
 
 
 def _requests(server, test_idx, n: int) -> list[Request]:
@@ -110,12 +125,22 @@ async def _orchestrated(server, reqs, arrivals, *, max_batch: int,
     results = await asyncio.gather(*(t.wait() for _, t in tickets))
     await orch.stop()
     lats, shed = [], 0
+    ttfc, gaps, chunks_total, streamed = [], [], 0, 0
     for (arr, t), r in zip(tickets, results):
         if isinstance(r, Overloaded):
             shed += 1
             continue
         lats.append(t.event("completed") - (t0 + arr))
-    return np.asarray(lats), shed, orch.stats()
+        fc = t.event("first_chunk")
+        if fc is not None:
+            streamed += 1
+            ttfc.append(fc - (t0 + arr))
+            chunks_total += len(t.chunk_times)
+            if len(t.chunk_times) > 1:
+                gaps.extend(np.diff(t.chunk_times))
+    stream = {"ttfc": np.asarray(ttfc), "gaps": np.asarray(gaps),
+              "chunks_total": chunks_total, "streamed": streamed}
+    return np.asarray(lats), shed, orch.stats(), stream
 
 
 def run(n_requests: int = 320, domain: str = "agriculture", seed: int = 0,
@@ -155,7 +180,7 @@ def run(n_requests: int = 320, domain: str = "agriculture", seed: int = 0,
                               for _ in range(n_requests)])
 
         lat_seq = _baseline(server, reqs, arrivals)
-        lat_orch, shed, stats = asyncio.run(_orchestrated(
+        lat_orch, shed, stats, stream = asyncio.run(_orchestrated(
             server, reqs, arrivals, max_batch=max_batch,
             max_wait_ms=max_wait_ms))
     finally:
@@ -164,6 +189,7 @@ def run(n_requests: int = 320, domain: str = "agriculture", seed: int = 0,
     assert len(lat_orch) + shed == n_requests, "requests lost in flight"
     buckets = {bucket_batch(b) for b in batch_sizes}
     p = lambda xs, q: float(np.percentile(xs, q) * 1e3)  # noqa: E731
+    ttfc, gaps = stream["ttfc"], stream["gaps"]
     return Result(
         n=n_requests, rate_qps=rate, per_query_ms=per_query_s * 1e3,
         p50_seq_ms=p(lat_seq, 50), p95_seq_ms=p(lat_seq, 95),
@@ -175,7 +201,11 @@ def run(n_requests: int = 320, domain: str = "agriculture", seed: int = 0,
         batches=stats["batches"],
         mean_bucket=stats["dispatched"] / max(stats["batches"], 1),
         kernel_traces=server.rps.kernel_trace_count,
-        distinct_buckets=len(buckets))
+        distinct_buckets=len(buckets),
+        ttfc_p50_ms=p(ttfc, 50) if ttfc.size else float("nan"),
+        ttfc_p95_ms=p(ttfc, 95) if ttfc.size else float("nan"),
+        inter_chunk_p95_ms=p(gaps, 95) if gaps.size else 0.0,
+        chunks_total=stream["chunks_total"], streamed=stream["streamed"])
 
 
 def render(r: Result) -> str:
@@ -191,6 +221,10 @@ def render(r: Result) -> str:
         f"  dispatch buckets   {r.batches}  (mean size {r.mean_bucket:.1f})",
         f"  selector traces    {r.kernel_traces} over {r.distinct_buckets} "
         f"distinct jit buckets (no per-size retrace)",
+        f"  streaming          {r.streamed}/{r.n - r.shed} tickets, "
+        f"{r.chunks_total} chunks; TTFC p50 {r.ttfc_p50_ms:.1f} ms "
+        f"(p95 {r.ttfc_p95_ms:.1f} ms), inter-chunk p95 "
+        f"{r.inter_chunk_p95_ms:.2f} ms",
     ])
 
 
@@ -204,6 +238,13 @@ def main(argv=None) -> None:
     assert r.kernel_traces <= r.distinct_buckets, \
         f"{r.kernel_traces} traces for {r.distinct_buckets} buckets — " \
         "the fused selector is retracing within a bucket"
+    # streaming gates (smoke included — tier-1 runs this): every served
+    # ticket streamed, and first bytes beat the finished response
+    assert r.streamed == r.n - r.shed, \
+        f"only {r.streamed}/{r.n - r.shed} served tickets streamed chunks"
+    assert r.ttfc_p50_ms <= r.p50_orch_ms, \
+        f"TTFC p50 {r.ttfc_p50_ms:.1f} ms exceeds full-response p50 " \
+        f"{r.p50_orch_ms:.1f} ms — streaming is not delivering early"
     if not smoke:
         assert r.n >= 256, "benchmark below gated scale"
         # micro-batched admission must never lose to the per-query baseline
@@ -214,6 +255,15 @@ def main(argv=None) -> None:
             f"micro-batched p50 only {r.speedup_p50:.2f}x the per-query baseline"
         assert r.mean_bucket > 1.0, \
             "admission never coalesced: offered load too low to micro-batch"
+        # full-run streaming gates against the NON-streaming baseline: first
+        # bytes must beat the per-query p50 outright, and consecutive chunks
+        # must arrive faster than whole baseline responses complete
+        assert r.ttfc_p50_ms < r.p50_seq_ms, \
+            f"TTFC p50 {r.ttfc_p50_ms:.1f} ms not under the non-streaming " \
+            f"baseline p50 {r.p50_seq_ms:.1f} ms"
+        assert r.inter_chunk_p95_ms <= r.p50_seq_ms, \
+            f"inter-chunk p95 {r.inter_chunk_p95_ms:.1f} ms exceeds the " \
+            f"non-streaming baseline p50 {r.p50_seq_ms:.1f} ms"
     reporting.emit("async_serving", r, smoke=smoke)
 
 

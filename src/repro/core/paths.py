@@ -15,6 +15,13 @@ from repro.core.devices import EDGE_DEVICES, DeviceProfile, ModelProfile
 
 MODULES = ("qproc", "retrieval", "cproc", "model")
 
+# virtual model impl for CE-CoLLM split inference (edge drafts chunks behind a
+# confidence gate, cloud verifies/continues low-confidence spans); parameters
+# name the edge/cloud members and the early-exit threshold tau.  Opt-in via
+# `with_split_models` so the default space (and every table keyed off it)
+# stays byte-identical.
+SPLIT_IMPL = "split"
+
 
 @dataclass(frozen=True)
 class ComponentChoice:
@@ -108,6 +115,21 @@ DEFAULT_SPEC: dict[str, dict[str, dict[str, list]]] = {
 }
 
 
+def with_split_models(spec: dict | None = None, *,
+                      edges: Iterable[str] = ("internlm2-1.8b",
+                                              "recurrentgemma-2b"),
+                      clouds: Iterable[str] = ("llama4-scout-cloud",
+                                               "kimi-k2-cloud"),
+                      taus: Iterable[float] = (0.6,)) -> dict:
+    """A spec extending ``spec`` (default: ``DEFAULT_SPEC``) with split
+    edge-draft/cloud-verify model choices — one per (edge, cloud, tau)."""
+    base = dict(spec or DEFAULT_SPEC)
+    base["model"] = dict(base["model"])
+    base["model"][SPLIT_IMPL] = {
+        "edge": list(edges), "cloud": list(clouds), "tau": list(taus)}
+    return base
+
+
 class PathSpace:
     def __init__(self, spec: dict | None = None, device: DeviceProfile | None = None):
         self.spec = spec or DEFAULT_SPEC
@@ -119,6 +141,19 @@ class PathSpace:
         out = []
         for impl, grid in self.spec[module].items():
             if module == "model":
+                if impl == SPLIT_IMPL:
+                    # split inference runs its draft loop on-device: the
+                    # configuration fits iff its edge member fits (the cloud
+                    # member always "fits" — it is remote)
+                    keys = sorted(grid)
+                    for combo in itertools.product(*(grid[k] for k in keys)):
+                        params = dict(zip(keys, combo))
+                        if not model_fits_device(
+                                MODEL_CATALOG[params["edge"]], self.device):
+                            continue
+                        out.append(ComponentChoice(
+                            module, impl, tuple(zip(keys, combo))))
+                    continue
                 prof = MODEL_CATALOG[impl]
                 if not model_fits_device(prof, self.device):
                     continue
@@ -147,4 +182,8 @@ class PathSpace:
         return len(self.paths)
 
     def model_profile(self, path: Path) -> ModelProfile:
+        if path.model.impl == SPLIT_IMPL:
+            # the on-device half; callers sizing RAM/latency budgets see the
+            # resident edge member (the cloud half never occupies the device)
+            return MODEL_CATALOG[path.model.param("edge")]
         return MODEL_CATALOG[path.model.impl]

@@ -20,11 +20,13 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.devices import (CLOUD_DEVICE, CLOUD_RTT_S, DeviceProfile,
-                                ModelProfile, model_call_cost_usd,
-                                model_call_latency_s)
+                                ModelProfile, decode_latency_s,
+                                model_call_cost_usd, model_call_latency_s)
 from repro.core.domains import TYPE_NEEDS, DomainData, Query
-from repro.core.paths import MODEL_CATALOG, ComponentChoice, Path
+from repro.core.paths import MODEL_CATALOG, SPLIT_IMPL, ComponentChoice, Path
 from repro.core.retrieval import VectorStore
+from repro.core.splitgen import (CHUNK_TOKENS, EmitFn, GenChunk,
+                                 generate_split)
 from repro.core.text import embed_text
 
 HELPER_MODEL = "internlm2-1.8b"  # SLM used by stepback/HyDE/compress calls
@@ -45,6 +47,9 @@ class StageState:
     compressed: float = 1.0  # surviving fraction of context tokens
     reasoning_boost: float = 0.0
     context_tokens: int = 0
+    # effective capability for split paths (edge tier -> cloud tier by the
+    # escalated-token fraction); NaN means "use the catalog quality_tier"
+    knowledge_override: float = float("nan")
 
 
 class PipelineExecutor:
@@ -195,11 +200,33 @@ class PipelineExecutor:
         raise KeyError(choice.impl)
 
     def run_model(self, q: Query, choice: ComponentChoice, st: StageState) -> StageState:
+        if choice.impl == SPLIT_IMPL:
+            return self._run_split_model(q, choice, st)
         model = MODEL_CATALOG[choice.impl]
         prompt = int(st.prompt_tokens * (st.compressed if st.context_tokens else 1.0))
         lat = model_call_latency_s(model, self.device, prompt, out_tokens=0)
         cost = model_call_cost_usd(model, prompt, OUT_TOKENS)
         return replace(st, latency_s=st.latency_s + lat, cost_usd=st.cost_usd + cost)
+
+    def _run_split_model(self, q: Query, choice: ComponentChoice,
+                         st: StageState, emit: EmitFn | None = None
+                         ) -> StageState:
+        """Split-inference model stage (see core/splitgen.py): deterministic
+        edge-draft / cloud-verify generation.  With ``emit`` the chunks
+        stream out as they are drafted; the returned state is identical
+        either way (the trace is a pure function of (seed, qid, config))."""
+        edge = MODEL_CATALOG[choice.param("edge")]
+        cloud = MODEL_CATALOG[choice.param("cloud")]
+        tau = float(choice.param("tau", 0.6))
+        prompt = int(st.prompt_tokens * (st.compressed if st.context_tokens else 1.0))
+        r = generate_split(
+            seed=self.seed, qid=q.qid, complexity=q.complexity,
+            edge=edge, cloud=cloud, tau=tau, device=self.device,
+            prompt_tokens=prompt, out_tokens=OUT_TOKENS,
+            grounding=st.grounding, start_latency_s=st.latency_s,
+            start_cost_usd=st.cost_usd, emit=emit)
+        return replace(st, latency_s=r.latency_s, cost_usd=r.cost_usd,
+                       knowledge_override=r.knowledge)
 
     # -- judge oracle ---------------------------------------------------------
 
@@ -207,8 +234,11 @@ class PipelineExecutor:
         """Deterministic G-Eval stand-in. See module docstring."""
         prof = self.domain.profile
         needs = TYPE_NEEDS[q.qtype]
-        model = MODEL_CATALOG[path.model.impl]
-        knowledge = model.quality_tier
+        if path.model.impl == SPLIT_IMPL:
+            # blended capability computed by the split model stage
+            knowledge = st.knowledge_override
+        else:
+            knowledge = MODEL_CATALOG[path.model.impl].quality_tier
 
         # grounding term: measured recall, or parametric knowledge fallback
         if path.retrieval.impl == "null":
@@ -258,6 +288,50 @@ class PipelineExecutor:
         acc = self.judge(q, path, st)
         return acc, st.latency_s, st.cost_usd
 
+    def run_stream(self, q: Query, path: Path, emit: EmitFn
+                   ) -> tuple[float, float, float] | None:
+        """Streaming variant of ``run``: the same stage walk and a
+        bit-identical final (acc, latency_s, cost_usd), with the response
+        decode emitted as ordered ``GenChunk``s through ``emit``.  ``emit``
+        returning False tears the stream down — the return value is then
+        None (no judged result for a cancelled generation)."""
+        st = self.initial_state(q)
+        st = self.run_qproc(q, path.qproc, st)
+        st = self.run_retrieval(q, path.retrieval, st)
+        st = self.run_cproc(q, path.cproc, st)
+        if path.model.impl == SPLIT_IMPL:
+            alive = True
+
+            def gate(chunk: GenChunk) -> bool:
+                nonlocal alive
+                alive = alive and bool(emit(chunk))
+                return alive
+
+            st = self._run_split_model(q, path.model, st, emit=gate)
+            if not alive:
+                return None
+            acc = self.judge(q, path, st)
+            return acc, st.latency_s, st.cost_usd
+        # whole-model path: final metrics come from the exact same calls as
+        # run() (bit-for-bit by construction); the chunk timeline decorates
+        # the bandwidth-bound decode trajectory on top of the TTFT metric
+        st = self.run_model(q, path.model, st)
+        acc = self.judge(q, path, st)
+        model = MODEL_CATALOG[path.model.impl]
+        dev = CLOUD_DEVICE if model.placement == "cloud" else self.device
+        done, i = 0, 0
+        while done < OUT_TOKENS:
+            tokens = min(CHUNK_TOKENS, OUT_TOKENS - done)
+            done += tokens
+            if not emit(GenChunk(
+                    index=i, tokens=tokens, source=path.model.impl,
+                    confidence=1.0,
+                    latency_s=st.latency_s + decode_latency_s(model, dev, done),
+                    cost_usd=st.cost_usd, final=done >= OUT_TOKENS)):
+                return None
+            i += 1
+        return acc, st.latency_s, st.cost_usd
+
 
 # ---------------------------------------------------------------------------
 # batched execution engine
@@ -302,7 +376,17 @@ class BatchedPipelineExecutor:
         #   5 usd/1k input, 6 usd_per_1k_out * OUT_TOKENS, 7 retrieval-null flag
         self._m_cols = np.empty((P, 8))
         self._key_bytes = []
+        # split-inference paths have no single catalog model: their model
+        # stage is data-dependent (per-chunk confidence gating), so those
+        # cells run the scalar walk in finish_block — trivially bit-equal
+        # with the oracle — while the rest of the block stays vectorized
+        self._split_js = np.zeros(P, bool)
         for j, p in enumerate(self.paths):
+            if p.model.impl == SPLIT_IMPL:
+                self._split_js[j] = True
+                self._m_cols[j] = 0.0  # never read for split rows
+                self._key_bytes.append(p.key.encode())
+                continue
             m = MODEL_CATALOG[p.model.impl]
             dev = CLOUD_DEVICE if m.placement == "cloud" else device
             self._m_cols[j] = (
@@ -466,7 +550,32 @@ class BatchedPipelineExecutor:
 
         ``js`` indexes ``self.paths``; ``state_of[i]`` indexes ``states`` for
         path ``js[i]``.  Returns (accuracy, latency_s, cost_usd) arrays.
+        Split-inference cells (chunk-level confidence gating, no single
+        catalog model row) are resolved by the scalar walk; everything else
+        stays on the vectorized fast path.
         """
+        split = self._split_js[js]
+        if not split.any():
+            return self._finish_vec(q, states, state_of, js)
+        acc = np.empty(js.size)
+        lat = np.empty(js.size)
+        cost = np.empty(js.size)
+        rest = ~split
+        if rest.any():
+            acc[rest], lat[rest], cost[rest] = self._finish_vec(
+                q, states, state_of[rest], js[rest])
+        ex = self.scalar
+        for i in np.nonzero(split)[0]:
+            p = self.paths[js[i]]
+            st = ex.run_model(q, p.model, states[state_of[i]])
+            acc[i] = ex.judge(q, p, st)
+            lat[i] = st.latency_s
+            cost[i] = st.cost_usd
+        return acc, lat, cost
+
+    def _finish_vec(self, q: Query, states: Sequence[StageState],
+                    state_of: np.ndarray, js: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         ex = self.scalar
         # per-state scalars in one pass (Python int() keeps truncation exact)
         cols = np.array([(

@@ -14,7 +14,12 @@ latency / cost / SLO attainment.  Serving modes:
                    back-to-back otherwise) and micro-batched admission
                    coalesces the selection passes
   * ``--repl``     interactive open-world REPL over the orchestrator: type a
-                   prompt, get the routed response + ticket timeline
+                   prompt, watch the response stream chunk-by-chunk (``async
+                   for chunk in ticket``), then the timeline + SLO verdict
+
+``--split`` extends the path space with CE-CoLLM split-inference choices
+(edge drafts chunks behind a confidence gate, cloud verifies low-confidence
+spans) so the selector can route draft/verify paths per query/SLO.
 """
 from __future__ import annotations
 
@@ -29,7 +34,7 @@ from repro.core.cca import critical_component_analysis
 from repro.core.domains import build_domain, train_test_split
 from repro.core.dsqe import train_dsqe
 from repro.core.emulator import Emulator
-from repro.core.paths import PathSpace
+from repro.core.paths import PathSpace, with_split_models
 from repro.core.rps import RuntimePathSelector
 from repro.core.slo import SLO
 from repro.runtime.orchestrator import Overloaded
@@ -38,9 +43,9 @@ from repro.runtime.server import EcoLLMServer, Request
 
 def build_server(domain_name: str, *, n_queries: int = 120, budget: float = 5.0,
                  lam: int = 0, seed: int = 0, n_replicas: int = 2,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, split: bool = False):
     dom = build_domain(domain_name, n_queries=n_queries, seed=seed)
-    space = PathSpace()
+    space = PathSpace(spec=with_split_models() if split else None)
     train_idx, test_idx = train_test_split(dom, 0.3)
     emu = Emulator(dom, space, seed=seed)
     table = emu.explore(train_idx, budget=budget, lam=lam)
@@ -72,7 +77,15 @@ async def drive_async(server: EcoLLMServer, reqs: list[Request], *,
     results = await asyncio.gather(*(t.wait() for t in tickets))
     await orch.stop()
     served = [r for r in results if not isinstance(r, Overloaded)]
-    return served, len(results) - len(served), orch.stats()
+    stats = orch.stats()
+    # streamed first-chunk latency relative to dispatch, aggregated over the
+    # tickets that streamed (all of them, when the orchestrator streams)
+    ttfc = [t.event("first_chunk") - t.event("dispatched") for t in tickets
+            if t.event("first_chunk") is not None
+            and t.event("dispatched") is not None]
+    stats["ttfc_mean_s"] = float(np.mean(ttfc)) if ttfc else float("nan")
+    stats["streamed"] = len(ttfc)
+    return served, len(results) - len(served), stats
 
 
 async def repl(server: EcoLLMServer, slo: SLO) -> None:
@@ -88,6 +101,11 @@ async def repl(server: EcoLLMServer, slo: SLO) -> None:
         if not line or not line.strip():
             break
         ticket = await orch.submit(Request(prompt=line.strip(), slo=slo))
+        # stream the response as it is generated: drafted/verified spans for
+        # split paths, decode spans for whole-model paths
+        async for chunk in ticket:
+            print(f"  .. [{chunk.source}#{chunk.index}] {chunk.tokens} tok "
+                  f"conf={chunk.confidence:.2f} t+{chunk.latency_s:.2f}s")
         resp = await ticket
         if isinstance(resp, Overloaded):
             print(f"  shed ({resp.reason}); retry later")
@@ -113,6 +131,9 @@ def main() -> None:
     ap.add_argument("--max-cost", type=float, default=float("inf"))
     ap.add_argument("--use-kernel", action="store_true",
                     help="route batch selection through the fused dsqe_score pass")
+    ap.add_argument("--split", action="store_true",
+                    help="extend the path space with CE-CoLLM split "
+                         "edge-draft/cloud-verify model configurations")
     ap.add_argument("--batch", action="store_true",
                     help="serve via the handle_batch shim (one selection pass)")
     ap.add_argument("--async", dest="use_async", action="store_true",
@@ -129,7 +150,7 @@ def main() -> None:
 
     server, test_idx = build_server(args.domain, n_queries=args.queries,
                                     budget=args.budget, lam=int(args.latency_first),
-                                    use_kernel=args.use_kernel)
+                                    use_kernel=args.use_kernel, split=args.split)
     slo = SLO(max_latency_s=args.max_latency, max_cost_usd=args.max_cost)
     if args.repl:
         asyncio.run(repl(server, slo))
@@ -142,7 +163,8 @@ def main() -> None:
             max_wait_ms=args.max_wait_ms, rate_qps=args.rate))
         print(f"admission: {stats['batches']} buckets, mean size "
               f"{stats['dispatched'] / max(stats['batches'], 1):.1f}, "
-              f"shed {shed}")
+              f"shed {shed}, streamed {stats['streamed']} "
+              f"(TTFC {stats['ttfc_mean_s'] * 1e3:.1f} ms after dispatch)")
     elif args.batch:
         responses = server.handle_batch(reqs)
     else:

@@ -32,6 +32,20 @@ the fleet degrades to the deterministic sequential dispatcher (bit-for-bit
 the pre-threaded behaviour, including its simulated post-hoc hedge
 accounting) — the mode the parity tests pin.
 
+Streaming contract (``submit_many_async(..., stream=True)``): replicas with
+an ``execute_stream`` deliver partial results through
+``FleetFuture.add_chunk_callback`` — in order, exactly once, buffered chunks
+replayed to late subscribers under the flight lock.  Ownership is
+first-bytes-wins: the first replica to emit a chunk claims the stream
+(``_Flight.stream_owner``); a hedged/requeued duplicate that emits later is
+refused at its first chunk and stops drafting, and a duplicate that runs to
+completion is discarded on arrival — either way it is accounted through the
+same cancellation counters as a lost non-streaming race (fleet
+``cancelled_count`` == sum of per-flight ``meta["cancelled"]``, exact at
+quiescence).  A flight whose stream is already owned is never hedged (a
+backup could not win) and never requeued by eviction (delivered chunks
+cannot be replayed; the owning thread still settles it).
+
 Accounting is exact under concurrency: every hedge/failover/requeue/cancel
 increments the fleet counter and the per-flight counter inside the same
 critical section, so ``sum(meta[...]) == fleet counter`` always holds.
@@ -105,18 +119,31 @@ class Replica:
     fail_rate: float = 0.0
     straggle_rate: float = 0.0
     straggle_s: float = 0.5
+    # streaming variant: (request, emit) -> result | None (None == torn down
+    # mid-stream by the emit callback); optional — replicas without it serve
+    # streamed flights as a single final result
+    execute_stream: Optional[Callable] = None
 
-    def call(self, request, rng: random.Random):
+    def call(self, request, rng: random.Random, emit: Optional[Callable] = None):
         t0 = time.perf_counter()
         if rng.random() < self.fail_rate:
             self.stats.record_failure()
             raise RuntimeError(f"replica {self.rid} failed")
         extra = self.straggle_s if rng.random() < self.straggle_rate else 0.0
+        slept = 0.0
         if extra:
-            time.sleep(min(extra, 0.05))  # bounded real sleep in tests
-        out = self.execute(request)
+            slept = min(extra, 0.05)  # bounded real sleep in tests
+            time.sleep(slept)
+        if emit is not None and self.execute_stream is not None:
+            out = self.execute_stream(request, emit)
+        else:
+            out = self.execute(request)
         wall = time.perf_counter() - t0
-        lat = wall + extra
+        # modeled latency = real wall + only the UN-slept remainder of the
+        # injected straggle: the slept part is already inside `wall`, so
+        # adding `extra` whole double-counted it and inflated the rolling
+        # p95 that hedge deadlines derive from
+        lat = wall + (extra - slept)
         self.stats.record_success(lat, wall)
         return out, lat
 
@@ -125,13 +152,17 @@ class _Flight:
     """One logical request tracked through dispatch, failover, hedging and
     eviction re-queues.  ``lock`` guards all mutable state; the completion
     flag flips exactly once (first finisher wins), so a request can neither
-    be lost nor double-delivered."""
+    be lost nor double-delivered.  Streamed flights additionally track the
+    owning replica (first-bytes-wins) and the ordered chunk log — delivery
+    to chunk callbacks happens under ``lock``, so subscribers observe every
+    chunk exactly once and in order."""
 
     __slots__ = ("request", "hedge_allowed", "lock", "done", "result", "meta",
                  "error", "failures", "hedges", "requeues",
-                 "tried_failed", "active", "completed", "claims", "callbacks")
+                 "tried_failed", "active", "completed", "claims", "callbacks",
+                 "stream", "stream_owner", "chunks", "chunk_cbs", "cancelled")
 
-    def __init__(self, request, hedge_allowed: bool):
+    def __init__(self, request, hedge_allowed: bool, stream: bool = False):
         self.request = request
         self.hedge_allowed = hedge_allowed
         self.lock = threading.Lock()
@@ -144,9 +175,14 @@ class _Flight:
         self.failures = 0        # executions that raised
         self.hedges = 0          # hedge duplicates dispatched
         self.requeues = 0        # eviction-driven duplicates dispatched
+        self.cancelled = 0       # duplicate executions discarded (this flight)
         self.tried_failed: set[int] = set()   # rids that failed this flight
         self.active: dict[int, float] = {}    # rid -> start wall time
         self.completed = False
+        self.stream = stream
+        self.stream_owner: Optional[int] = None  # rid holding first-bytes-wins
+        self.chunks: list = []                   # ordered delivered chunks
+        self.chunk_cbs: list = []                # chunk subscribers
         # copies popped from a queue but not yet registered as executing;
         # covers the hand-off window so the orphan rescue can't double-
         # dispatch a flight that a worker is about to start (guarded by
@@ -192,6 +228,24 @@ class FleetFuture:
                 f.callbacks.append(lambda: fn(self))
         if fire:
             fn(self)
+
+    def add_chunk_callback(self, fn: Callable) -> None:
+        """Subscribe to streamed partial results: ``fn(chunk)`` per chunk,
+        in order, exactly once.  Chunks delivered before subscription are
+        replayed first (under the flight lock, so the replay and the live
+        tail cannot interleave or duplicate).  Same discipline as done
+        callbacks: be fast, don't call back into the fleet."""
+        f = self._flight
+        with f.lock:
+            for chunk in f.chunks:
+                fn(chunk)
+            f.chunk_cbs.append(fn)
+
+    def chunks(self) -> list:
+        """Snapshot of the chunks delivered so far (ordered)."""
+        f = self._flight
+        with f.lock:
+            return list(f.chunks)
 
 
 class ReplicaFleet:
@@ -344,6 +398,12 @@ class ReplicaFleet:
             with f.lock:
                 if f.completed or r.rid not in f.active:
                     continue
+                if f.stream_owner is not None:
+                    # an owned stream cannot be duplicated: chunks already
+                    # delivered would be missing from the replay.  The owner
+                    # thread keeps running and settles the flight itself
+                    # (success or a terminal owner-death failure).
+                    continue
                 f.requeues += 1
             self.requeue_count += 1
             self._requeue_locked(f, exclude={r.rid} | set(f.tried_failed),
@@ -384,7 +444,8 @@ class ReplicaFleet:
             return [self._submit_sequential(r, hedge) for r in requests]
         return self._run_flights([_Flight(r, hedge) for r in requests], hedge)
 
-    def submit_many_async(self, requests, hedge: bool = True) -> list[FleetFuture]:
+    def submit_many_async(self, requests, hedge: bool = True,
+                          stream: bool = False) -> list[FleetFuture]:
         """Non-blocking fan-out: enqueue the batch and return a
         ``FleetFuture`` per request without waiting for any of them.
 
@@ -393,18 +454,23 @@ class ReplicaFleet:
         await thousands of flights without a thread parked per request; a
         persistent monitor thread takes over hedging/orphan rescue (the job
         ``_run_flights`` does inline for the blocking entrypoints).  With
-        ``max_workers=1`` the deterministic sequential dispatcher runs
+        ``stream=True`` replicas exposing ``execute_stream`` push partial
+        results through ``FleetFuture.add_chunk_callback`` (module
+        docstring: first-bytes-wins ownership, exactly-once delivery).
+        With ``max_workers=1`` the deterministic sequential dispatcher runs
         inline and the returned futures are already complete — same RNG
-        draw order and accounting as ``submit_many``."""
+        draw order and accounting as ``submit_many`` (chunks, if streamed,
+        are buffered for replay)."""
         requests = list(requests)
         if self._pool is None:
             if not self.live():  # match the threaded branch: fail at submit
                 raise RuntimeError("no live replicas")
             out = []
             for r in requests:
-                f = _Flight(r, hedge)
+                f = _Flight(r, hedge, stream)
+                emit = self._make_emit(f, rid=-1) if stream else None
                 try:
-                    f.result, f.meta = self._submit_sequential(r, hedge)
+                    f.result, f.meta = self._submit_sequential(r, hedge, emit)
                 except Exception as e:  # noqa: BLE001 — surfaced via future
                     # store the ORIGINAL failure (the sequential dispatcher
                     # chains it as __cause__) so FleetFuture.result wraps it
@@ -415,7 +481,7 @@ class ReplicaFleet:
                 self._finish(f)
                 out.append(FleetFuture(f))
             return out
-        flights = [_Flight(r, hedge) for r in requests]
+        flights = [_Flight(r, hedge, stream) for r in requests]
         with self._lock:
             if not self._live:
                 raise RuntimeError("no live replicas")
@@ -427,6 +493,26 @@ class ReplicaFleet:
             self._ensure_monitor_locked()
         self._wake.set()
         return [FleetFuture(f) for f in flights]
+
+    @staticmethod
+    def _make_emit(f: _Flight, rid: int) -> Callable:
+        """Chunk-emission hook for one (flight, replica) execution.  The
+        first emitted chunk claims stream ownership (first-bytes-wins);
+        emits from any other replica — a hedge/requeue duplicate that lost
+        the race — return False, telling the producer to stop drafting.
+        Chunk buffering and callback delivery happen under the flight lock:
+        exactly-once, in order, atomic with the ownership check."""
+        def emit(chunk) -> bool:
+            with f.lock:
+                if f.completed or (f.stream_owner is not None
+                                   and f.stream_owner != rid):
+                    return False  # a rival already owns (or won) this flight
+                f.stream_owner = rid
+                f.chunks.append(chunk)
+                for cb in f.chunk_cbs:
+                    cb(chunk)
+            return True
+        return emit
 
     @staticmethod
     def _finish(f: _Flight) -> None:
@@ -480,9 +566,13 @@ class ReplicaFleet:
 
     # -- sequential reference dispatcher (deterministic mode) ----------------
 
-    def _submit_sequential(self, request, hedge: bool):
+    def _submit_sequential(self, request, hedge: bool, emit=None):
         """Pre-threaded behaviour, bit-for-bit: same RNG draw order, same
-        simulated hedge accounting (min with the backup's rolling p95)."""
+        simulated hedge accounting (min with the backup's rolling p95),
+        with the hedge threshold floored at ``hedge_floor_s`` like the
+        threaded monitor's deadline.
+        ``emit`` (streamed flights) rides along unchanged — it cannot alter
+        the draw order, and non-streaming calls never pass it."""
         attempts = 0
         last_err: Optional[Exception] = None
         while attempts < self.max_attempts:
@@ -491,7 +581,7 @@ class ReplicaFleet:
                 raise RuntimeError("no live replicas")
             primary = self.rng.choice(live)
             try:
-                out, lat = primary.call(request, self.rng)
+                out, lat = primary.call(request, self.rng, emit)
             except Exception as e:  # noqa: BLE001 — failover path
                 with self._lock:
                     self.failover_count += 1
@@ -499,7 +589,13 @@ class ReplicaFleet:
                 last_err = e
                 attempts += 1
                 continue
-            if hedge and len(live) > 1 and lat > 2.0 * primary.stats.p95():
+            # floored like the threaded monitor's deadline: with a warm p95
+            # window of trivially-fast calls, a bare `2 * p95` threshold is
+            # microseconds — scheduler jitter would fire spurious hedges
+            # (and burn an extra rng draw, breaking determinism)
+            if (hedge and len(live) > 1
+                    and lat > max(self.hedge_floor_s,
+                                  2.0 * primary.stats.p95())):
                 backup = self.rng.choice(
                     [r for r in live if r.rid != primary.rid])
                 with self._lock:
@@ -631,8 +727,14 @@ class ReplicaFleet:
             r = self._live.get(rid)
             if r is not None:
                 with f.lock:
-                    if f.completed:
-                        self.cancelled_count += 1  # cancelled before start
+                    if f.completed or (f.stream_owner is not None
+                                       and f.stream_owner != rid):
+                        # cancelled before start (or a rival stream already
+                        # owns delivery): same accounting as a lost race
+                        f.cancelled += 1
+                        if f.meta is not None:
+                            f.meta["cancelled"] = f.cancelled
+                        self.cancelled_count += 1
                         return
                     f.active[rid] = time.perf_counter()
                 self._active_by_rid[rid].add(f)
@@ -642,8 +744,9 @@ class ReplicaFleet:
                 self._requeue_locked(f, exclude={rid}, priority=True)
         if rep is None:
             return
+        emit = self._make_emit(f, rid) if f.stream else None
         try:
-            out, lat = rep.call(f.request, self.rng)
+            out, lat = rep.call(f.request, self.rng, emit)
             err = None
         except Exception as e:  # noqa: BLE001 — failover path
             err, out, lat = e, None, 0.0
@@ -653,7 +756,12 @@ class ReplicaFleet:
                 self._active_by_rid.get(rid, set()).discard(f)
                 with f.lock:
                     f.active.pop(rid, None)
-                    if not f.completed:
+                    # a streamed flight is only winnable by its owner: a
+                    # duplicate that ran to completion without ever claiming
+                    # first bytes is a loser even if it lands first
+                    loser = (f.completed or (f.stream_owner is not None
+                                             and f.stream_owner != rid))
+                    if not loser:
                         winner = True
                         f.completed = True
                         # "attempts" = retries + 1, mirroring the sequential
@@ -661,8 +769,17 @@ class ReplicaFleet:
                         # — those are under their own keys)
                         f.meta = {"replica": rid, "latency_s": lat,
                                   "attempts": f.failures + 1,
-                                  "hedges": f.hedges, "requeues": f.requeues}
+                                  "hedges": f.hedges, "requeues": f.requeues,
+                                  "cancelled": f.cancelled,
+                                  "chunks": len(f.chunks)}
                         f.result = out
+                    else:
+                        # per-flight mirror of cancelled_count; late losers
+                        # update the already-published meta in place (exact
+                        # equality is asserted at quiescence)
+                        f.cancelled += 1
+                        if f.meta is not None:
+                            f.meta["cancelled"] = f.cancelled
                 if not winner:
                     self.cancelled_count += 1  # loser of a hedge/requeue race
                 self._gc_rid_locked(rid)
@@ -678,7 +795,12 @@ class ReplicaFleet:
                 f.active.pop(rid, None)
                 f.failures += 1
                 f.tried_failed.add(rid)
-                if not f.completed and f.failures >= self.max_attempts:
+                # an owner dying mid-stream is terminal: chunks already
+                # delivered cannot be replayed by a fresh replica, so the
+                # flight fails instead of silently double-streaming
+                owner_died = f.stream_owner == rid
+                if not f.completed and (owner_died
+                                        or f.failures >= self.max_attempts):
                     f.completed = True
                     f.error = err
                     give_up = True
@@ -708,7 +830,10 @@ class ReplicaFleet:
         if hedge:
             for f in pending:
                 with f.lock:
+                    # an owned stream is never hedged: the backup could not
+                    # win (first bytes already committed delivery to rid0)
                     if (f.completed or not f.hedge_allowed
+                            or f.stream_owner is not None
                             or f.hedges >= self.max_hedges or not f.active):
                         continue
                     rid0, t0 = min(f.active.items(), key=lambda kv: kv[1])
@@ -720,7 +845,10 @@ class ReplicaFleet:
             for f, rid0 in to_hedge:
                 fired = False
                 with f.lock:
-                    if not f.completed and f.hedges < self.max_hedges:
+                    # recheck under the lock: the stream may have been
+                    # claimed between the eligibility scan and the fire
+                    if (not f.completed and f.stream_owner is None
+                            and f.hedges < self.max_hedges):
                         f.hedges += 1
                         fired = True
                 if fired:

@@ -23,6 +23,17 @@ stamped with ``time.perf_counter()``.  Selection overheads ride on the
 ``Decision`` as before — amortized ``overhead_s`` plus the full
 ``batch_overhead_s`` of the bucket's selection pass.
 
+Streaming contract: a ticket is also an async iterator — ``async for chunk
+in ticket`` yields the response's ``GenChunk``s (split-inference drafts or
+whole-model decode spans) in order, exactly once, as the fleet delivers
+them; ``first_chunk`` lands on the timeline between ``dispatched`` and
+``completed`` and ``Ticket.chunk_times`` records per-chunk arrival stamps.
+The iterator terminates when the ticket settles (completed, shed, or
+failed), so it is safe on non-streaming outcomes too — it just yields
+nothing.  Chunks are a single-consumer side channel; ``await ticket`` is
+unchanged and bit-for-bit identical to the pre-streaming contract (the
+final Response comes from the same non-streamed accounting).
+
 The synchronous ``EcoLLMServer.handle`` / ``handle_batch`` survive as thin
 compatibility shims over ``dispatch_sync`` — the same bucket-dispatch
 pipeline with the blocking fleet fan-out, bit-for-bit the pre-orchestrator
@@ -31,6 +42,7 @@ responses.
 from __future__ import annotations
 
 import asyncio
+import heapq
 import itertools
 import threading
 import time
@@ -57,6 +69,9 @@ class Overloaded:
     max_queue: int
 
 
+_STREAM_END = object()  # chunk-queue terminator (pushed when the ticket settles)
+
+
 class Ticket:
     """Awaitable handle for one admitted (or shed) request.
 
@@ -66,10 +81,17 @@ class Ticket:
     ``admitted -> selected -> dispatched -> completed`` (``shed`` replaces
     the tail for rejected tickets; ``failed`` for a bucket whose dispatch
     raised — awaiting the ticket then re-raises that error).
+
+    ``async for chunk in ticket`` consumes the streamed partial results
+    (module docstring): ordered, exactly-once, terminated when the ticket
+    settles.  The first delivered chunk stamps ``first_chunk`` on the
+    timeline; every arrival appends to ``chunk_times``.  Single consumer:
+    chunks go to whichever iterator reads them first (a second ``async
+    for`` after exhaustion terminates immediately).
     """
 
     __slots__ = ("request", "priority", "deadline_s", "deadline_at", "events",
-                 "_future")
+                 "chunk_times", "_future", "_chunk_q", "_stream_done")
 
     def __init__(self, request: "Request", priority: int,
                  deadline_s: Optional[float], future: asyncio.Future):
@@ -78,7 +100,10 @@ class Ticket:
         self.deadline_s = deadline_s
         self.deadline_at: Optional[float] = None  # set on admission
         self.events: list[tuple[str, float]] = []
+        self.chunk_times: list[float] = []  # perf_counter per chunk arrival
         self._future = future
+        self._chunk_q: asyncio.Queue = asyncio.Queue()
+        self._stream_done = False
 
     def mark(self, name: str) -> None:
         self.events.append((name, time.perf_counter()))
@@ -105,6 +130,37 @@ class Ticket:
     async def wait(self) -> Union["Response", Overloaded]:
         return await self._future
 
+    # -- streaming side channel (loop-thread only) --------------------------
+
+    def _on_chunk(self, chunk) -> None:
+        """Deliver one streamed chunk (scheduled onto the event loop by the
+        orchestrator's fleet-side chunk forwarder)."""
+        if self._stream_done:
+            return  # settled already (e.g. raced with an error) — drop
+        if not self.chunk_times:
+            self.mark("first_chunk")
+        self.chunk_times.append(time.perf_counter())
+        self._chunk_q.put_nowait(chunk)
+
+    def _end_stream(self) -> None:
+        """Terminate the chunk iterator; idempotent, called at settle."""
+        if not self._stream_done:
+            self._stream_done = True
+            self._chunk_q.put_nowait(_STREAM_END)
+
+    async def _iter_chunks(self):
+        while True:
+            item = await self._chunk_q.get()
+            if item is _STREAM_END:
+                # re-arm the terminator so a later `async for` (or a racing
+                # second consumer) terminates instead of hanging forever
+                self._chunk_q.put_nowait(_STREAM_END)
+                return
+            yield item
+
+    def __aiter__(self):
+        return self._iter_chunks()
+
 
 _STOP_PRIO = float("inf")  # sorts after every real ticket in the heap
 
@@ -128,7 +184,7 @@ class Orchestrator:
 
     def __init__(self, server: "EcoLLMServer", *, max_batch: int = 32,
                  max_wait_ms: float = 2.0, max_queue: int = 256,
-                 hedge: bool = True):
+                 hedge: bool = True, stream: bool = True):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.server = server
@@ -136,10 +192,14 @@ class Orchestrator:
         self.max_wait_s = max_wait_ms / 1e3
         self.max_queue = max_queue
         self.hedge = hedge
+        self.stream = stream  # thread chunk delivery through to tickets
         # heap entries: (-priority, seq, ticket) — seq breaks ties FIFO and
         # keeps ticket objects out of the comparison
         self._queue: asyncio.PriorityQueue = asyncio.PriorityQueue(
             maxsize=max_queue)
+        # stop sentinels currently enqueued: qsize() minus this is the real
+        # backlog (a bare qsize() reported depth 1 on an empty stopping queue)
+        self._stop_sentinels = 0
         self._seq = itertools.count()
         self._queue_loop: Optional[asyncio.AbstractEventLoop] = None
         self._task: Optional[asyncio.Task] = None
@@ -182,6 +242,7 @@ class Orchestrator:
                     # stale stop sentinel from a torn-down session: carrying
                     # it over would make the fresh admission loop exit as
                     # soon as it drains to it
+                    self._stop_sentinels = max(0, self._stop_sentinels - 1)
                     continue
                 if ticket._future.get_loop() is not self._loop:
                     # the ticket's future is bound to a previous (dead)
@@ -214,6 +275,9 @@ class Orchestrator:
             return
         if not task.done():
             await self._queue.put((_STOP_PRIO, next(self._seq), None))
+            # counted after the put lands; both sides run on the loop
+            # thread, so the admission loop can't pop it before this line
+            self._stop_sentinels += 1
         await task
 
     async def __aenter__(self) -> "Orchestrator":
@@ -225,7 +289,8 @@ class Orchestrator:
     def reconfigure(self, *, max_batch: Optional[int] = None,
                     max_wait_ms: Optional[float] = None,
                     max_queue: Optional[int] = None,
-                    hedge: Optional[bool] = None) -> "Orchestrator":
+                    hedge: Optional[bool] = None,
+                    stream: Optional[bool] = None) -> "Orchestrator":
         """Change the admission policy while the loop is NOT running (the
         synchronous ``dispatch_sync`` path is policy-free, so a shim-created
         orchestrator can be re-tuned before its first async ``start()``).
@@ -241,6 +306,8 @@ class Orchestrator:
             self.max_wait_s = max_wait_ms / 1e3
         if hedge is not None:
             self.hedge = hedge
+        if stream is not None:
+            self.stream = stream
         if max_queue is not None and max_queue != self.max_queue:
             self.max_queue = max_queue
             old, self._queue = self._queue, asyncio.PriorityQueue(
@@ -275,8 +342,18 @@ class Orchestrator:
         try:
             self._queue.put_nowait((-float(priority), next(self._seq), ticket))
         except asyncio.QueueFull:
-            self._shed(ticket, "queue_full")
-            return ticket
+            # before shedding viable traffic, evict queue entries whose own
+            # deadline already lapsed — they are shed either way, and they
+            # must not squat on bounded-queue capacity
+            if not self._purge_lapsed():
+                self._shed(ticket, "queue_full")
+                return ticket
+            try:
+                self._queue.put_nowait(
+                    (-float(priority), next(self._seq), ticket))
+            except asyncio.QueueFull:  # full of still-viable tickets
+                self._shed(ticket, "queue_full")
+                return ticket
         ticket.mark("admitted")
         if deadline_s is not None:
             ticket.deadline_at = ticket.events[-1][1] + deadline_s
@@ -288,12 +365,17 @@ class Orchestrator:
         await asyncio.sleep(0)
         return ticket
 
+    def _queue_depth(self) -> int:
+        """Real admission backlog: qsize() minus enqueued stop sentinels."""
+        return max(0, self._queue.qsize() - self._stop_sentinels)
+
     def _fail(self, ticket: Ticket, err: Exception) -> None:
         ticket.mark("failed")
         with self._stats_lock:
             self.failed += 1
         if not ticket._future.done():
             ticket._future.set_exception(err)
+        ticket._end_stream()
 
     def _shed(self, ticket: Ticket, reason: str) -> None:
         ticket.mark("shed")
@@ -303,7 +385,35 @@ class Orchestrator:
                 self.deadline_shed_count += 1
         if not ticket._future.done():
             ticket._future.set_result(
-                Overloaded(reason, self._queue.qsize(), self.max_queue))
+                Overloaded(reason, self._queue_depth(), self.max_queue))
+        ticket._end_stream()
+
+    def _purge_lapsed(self) -> int:
+        """Shed queued tickets whose admission deadline already lapsed, so
+        dead entries stop counting against ``max_queue`` capacity (they were
+        previously only shed when popped into a bucket, squatting on slots
+        and forcing ``queue_full`` sheds of viable traffic).  Runs on the
+        loop thread; rebuilds the underlying heap in place."""
+        now = time.perf_counter()
+        heap = self._queue._queue
+
+        def lapsed(entry) -> bool:
+            t = entry[2]
+            return (t is not None and t.deadline_at is not None
+                    and now > t.deadline_at)
+
+        dead = [e for e in heap if lapsed(e)]
+        if not dead:
+            return 0
+        keep = [e for e in heap if not lapsed(e)]
+        heap.clear()
+        heap.extend(keep)
+        heapq.heapify(heap)
+        # the Queue's unfinished-task counter tracks puts, not the heap; the
+        # orchestrator never calls task_done/join, so no rebalance is needed
+        for e in dead:
+            self._shed(e[2], "deadline")
+        return len(dead)
 
     async def _admission_loop(self) -> None:
         """Accumulate concurrent submissions into buckets and dispatch each
@@ -311,6 +421,7 @@ class Orchestrator:
         while True:
             entry = await self._queue.get()
             if entry[2] is None:  # stop sentinel sorts last: queue is drained
+                self._stop_sentinels = max(0, self._stop_sentinels - 1)
                 return
             bucket = [entry[2]]
             t0 = time.perf_counter()
@@ -324,6 +435,7 @@ class Orchestrator:
                 except asyncio.TimeoutError:
                     break  # deadline flush: dispatch the partial bucket
                 if nxt[2] is None:
+                    self._stop_sentinels = max(0, self._stop_sentinels - 1)
                     stop = True
                     break
                 bucket.append(nxt[2])
@@ -370,12 +482,32 @@ class Orchestrator:
             None, self._select, reqs)
         for t in tickets:
             t.mark("selected")
-        futures = self.server.fleet.submit_many_async(jobs, hedge=self.hedge)
+        futures = self.server.fleet.submit_many_async(jobs, hedge=self.hedge,
+                                                      stream=self.stream)
         for t in tickets:
             t.mark("dispatched")
         for t, (query, _), dec, fut in zip(tickets, resolved, decisions,
                                            futures):
+            if self.stream:
+                # register the chunk forwarder BEFORE the done callback:
+                # call_soon_threadsafe is FIFO per thread, so buffered-chunk
+                # replay (inline sequential mode) schedules ahead of settle
+                # and `first_chunk` always precedes `completed`
+                fut.add_chunk_callback(self._chunk_forwarder(t))
             fut.add_done_callback(self._completer(t, query, dec))
+
+    def _chunk_forwarder(self, ticket: Ticket):
+        """Fleet-side chunk callback: hop each chunk onto the loop thread
+        (all ticket state is loop-confined)."""
+        loop = self._loop
+
+        def fwd(chunk):
+            try:
+                loop.call_soon_threadsafe(ticket._on_chunk, chunk)
+            except RuntimeError:
+                pass  # loop closed mid-stream: nothing can consume chunks
+
+        return fwd
 
     def _completer(self, ticket: Ticket, query, decision):
         """Fleet-side completion callback: build the Response off-loop, then
@@ -406,6 +538,7 @@ class Orchestrator:
                         ticket._future.set_exception(err)
                     else:
                         ticket._future.set_result(resp)
+                ticket._end_stream()
 
             try:
                 loop.call_soon_threadsafe(settle)
@@ -459,7 +592,7 @@ class Orchestrator:
                 "dispatched": self.dispatched,
                 "completed": self.completed,
                 "failed": self.failed,
-                "queue_depth": self._queue.qsize(),
+                "queue_depth": self._queue_depth(),
                 "max_batch": self.max_batch,
                 "max_queue": self.max_queue,
             }

@@ -78,12 +78,16 @@ class EcoLLMServer:
         # LRU memo for open-world prompt embeddings (same pattern as the
         # executor's retrieval memoization); guarded for concurrent handles
         self._embed_lock = threading.Lock()
-        self._embed_cache: OrderedDict[str, np.ndarray] = OrderedDict()
+        # prompt -> [embedding, resolved query index | None]: the index memo
+        # rides in the same entry so an LRU hit skips the nearest-neighbor
+        # GEMV too, not just the embedding recompute
+        self._embed_cache: OrderedDict[str, list] = OrderedDict()
         self.embed_cache_hits = 0
         self.embed_cache_misses = 0
 
         def make_replica(rid: int) -> Replica:
-            return Replica(rid=rid, execute=self._execute)
+            return Replica(rid=rid, execute=self._execute,
+                           execute_stream=self._execute_stream)
 
         self.fleet = ReplicaFleet(make_replica, n=n_replicas, seed=seed,
                                   max_workers=max_workers)
@@ -108,30 +112,50 @@ class EcoLLMServer:
         query, path = job
         return self.executor.run(query, path)
 
-    def _embed_prompt(self, prompt: str) -> np.ndarray:
+    def _execute_stream(self, job, emit):
+        """Streaming replica entry point: same final result as ``_execute``
+        (bit-for-bit — ``run_stream``'s contract), chunks through ``emit``."""
+        query, path = job
+        return self.executor.run_stream(query, path, emit)
+
+    def _embed_entry(self, prompt: str) -> list:
+        """The mutable ``[embedding, resolved-index | None]`` cache entry for
+        ``prompt`` — LRU semantics and hit/miss accounting live here."""
         with self._embed_lock:
-            emb = self._embed_cache.get(prompt)
-            if emb is not None:
+            ent = self._embed_cache.get(prompt)
+            if ent is not None:
                 self._embed_cache.move_to_end(prompt)
                 self.embed_cache_hits += 1
-                return emb
-        emb = embed_text(prompt)
+                return ent
+        ent = [embed_text(prompt), None]
         with self._embed_lock:
             self.embed_cache_misses += 1
-            emb = self._embed_cache.setdefault(prompt, emb)
+            ent = self._embed_cache.setdefault(prompt, ent)
             self._embed_cache.move_to_end(prompt)
             while len(self._embed_cache) > self.EMBED_CACHE_MAX:
                 self._embed_cache.popitem(last=False)
-        return emb
+        return ent
+
+    def _embed_prompt(self, prompt: str) -> np.ndarray:
+        return self._embed_entry(prompt)[0]
 
     def _resolve_query(self, req: Request):
         if req.qid is not None:
             return self.domain.queries[req.qid], self.domain.query_embeddings[req.qid]
         # open-world query: embed the raw prompt (memoized for repeats);
-        # judge against the closest known query's metadata (OOD path)
-        emb = self._embed_prompt(req.prompt)
-        sims = self.domain.query_embeddings @ emb
-        return self.domain.queries[int(np.argmax(sims))], emb
+        # judge against the closest known query's metadata (OOD path).  The
+        # nearest-neighbor index is memoized in the cache entry, so a repeat
+        # prompt skips the full `query_embeddings @ emb` GEMV, not just the
+        # embedding recompute
+        ent = self._embed_entry(req.prompt)
+        qidx = ent[1]
+        if qidx is None:
+            sims = self.domain.query_embeddings @ ent[0]
+            qidx = int(np.argmax(sims))
+            # benign race: argmax is deterministic in (prompt), so a racing
+            # writer stores the same value
+            ent[1] = qidx
+        return self.domain.queries[qidx], ent[0]
 
     def _respond(self, req: Request, query, decision, result, meta) -> Response:
         acc, lat, cost = result

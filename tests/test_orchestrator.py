@@ -76,7 +76,10 @@ def test_submit_awaitable_mixed_slos_and_events(served):
         assert resp.meta["batch_overhead_s"] >= resp.selection_overhead_s > 0
     for t in tickets:
         names = [n for n, _ in t.events]
-        assert names == ["admitted", "selected", "dispatched", "completed"]
+        # first_chunk lands between dispatched and completed (streaming is
+        # on by default; every served path streams at least one chunk)
+        assert names == ["admitted", "selected", "dispatched", "first_chunk",
+                         "completed"]
         stamps = [ts for _, ts in t.events]
         assert stamps == sorted(stamps)
 

@@ -1,0 +1,393 @@
+"""Streaming delivery + PR-6 bugfix regressions.
+
+Covers the streaming contract end to end — first-bytes-wins ownership under
+hedged duplicates, exactly-once in-order chunk delivery, mid-stream
+cancellation accounting (fleet counters == per-request meta), ``await
+ticket`` vs ``async for`` equivalence, the ``first_chunk`` timeline event —
+plus the satellite fixes: straggle double-count in ``Replica.call``, stop
+sentinels inflating queue depth, and deadline-lapsed tickets squatting on
+bounded admission-queue capacity.
+"""
+import asyncio
+import random
+import time
+from collections import defaultdict
+
+import numpy as np
+import pytest
+
+from repro.core.devices import EDGE_DEVICES
+from repro.core.paths import MODEL_CATALOG, SPLIT_IMPL
+from repro.core.splitgen import DraftState, generate_split
+from repro.launch.serve import build_server
+from repro.runtime.fleet import Replica, ReplicaFleet
+from repro.runtime.orchestrator import Orchestrator, Overloaded
+from repro.runtime.server import Request
+
+
+@pytest.fixture(scope="module")
+def served():
+    # split=True: the path space (and thus the trained RPS) includes the
+    # CE-CoLLM edge-draft/cloud-verify configurations
+    return build_server("smarthome", n_queries=30, budget=2.0, seed=1,
+                        split=True)
+
+
+def _quiesce(fleet, timeout=5.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        snap = fleet.snapshot()
+        if snap["in_flight"] == 0 and snap["queue_depth"] == 0:
+            return snap
+        time.sleep(0.002)
+    raise AssertionError("fleet did not quiesce")
+
+
+# -- satellite: Replica.call straggle accounting -----------------------------
+
+
+def test_straggle_latency_not_double_counted():
+    """Regression: modeled latency is wall + only the UN-slept remainder of
+    the injected straggle.  The old code added the whole ``straggle_s`` on
+    top of a wall clock that already contained the bounded real sleep, so
+    the rolling p95 driving hedge deadlines was inflated by the overlap."""
+    rep = Replica(rid=0, execute=lambda job: "ok",
+                  straggle_rate=1.0, straggle_s=0.5)
+    out, lat = rep.call("job", random.Random(0))
+    assert out == "ok"
+    wall = rep.stats.wall_latencies[-1]
+    assert rep.stats.latencies[-1] == lat
+    assert lat == wall + (0.5 - 0.05)  # exact: same float expression
+    assert wall < 0.25  # only the bounded 50 ms sleep was real
+
+
+# -- fleet streaming: ownership, exactly-once, cancellation ------------------
+
+
+def _streaming_fleet(n_chunks=3, chunk_delay=0.0, log=None, **kw):
+    """Two replicas; rid 0 straggles before its stream starts (the bounded
+    50 ms sleep happens in ``Replica.call`` ahead of ``execute_stream``)."""
+    def make(rid):
+        def execute(job):
+            return ("full", job)
+
+        def execute_stream(job, emit):
+            for i in range(n_chunks):
+                ok = emit((rid, i))
+                if log is not None:
+                    log.append((rid, i, ok))
+                if not ok:
+                    return None  # torn down: a rival owns the stream
+                if chunk_delay:
+                    time.sleep(chunk_delay)
+            return ("full", job)
+
+        return Replica(rid=rid, execute=execute,
+                       execute_stream=execute_stream,
+                       straggle_rate=1.0 if rid == 0 else 0.0,
+                       straggle_s=1.0)
+    return ReplicaFleet(make, n=2, seed=2, **kw)
+
+
+def test_hedged_stream_delivers_chunks_exactly_once_in_order():
+    """A straggling primary gets a hedge duplicate; whoever emits first owns
+    the stream, every subscriber sees each chunk exactly once and in order,
+    and the loser is cancelled with exact counter accounting."""
+    log = []
+    fleet = _streaming_fleet(log=log)
+    # warm the backup's rolling wall-clock p95 so hedge deadlines are armed
+    fleet.replicas[0].straggle_rate = 0.0
+    for _ in range(24):
+        fleet.submit("warm")
+    fleet.replicas[0].straggle_rate = 1.0
+
+    got = defaultdict(list)
+    futs = fleet.submit_many_async([f"j{i}" for i in range(6)], stream=True)
+    for i, fut in enumerate(futs):
+        fut.add_chunk_callback(lambda c, i=i: got[i].append(c))
+    outs = [fut.result(timeout=10.0) for fut in futs]
+    snap = _quiesce(fleet)
+
+    assert any(m["hedges"] for _, m in outs), "no hedge fired"
+    for i, (out, meta) in enumerate(outs):
+        assert out == ("full", f"j{i}")
+        chunks = got[i]
+        # exactly once, in order, single owner — and the owner is the winner
+        assert [c[1] for c in chunks] == [0, 1, 2]
+        assert {c[0] for c in chunks} == {meta["replica"]}
+        assert meta["chunks"] == 3
+        assert futs[i].chunks() == chunks  # snapshot matches live delivery
+    # a refused emit stops the producer at its FIRST chunk: losers never
+    # draft past the refusal
+    refused = [(rid, i) for rid, i, ok in log if not ok]
+    assert all(i == 0 for _, i in refused)
+    # fleet counter == sum of per-flight meta, exact at quiescence (late
+    # losers updated the published meta in place)
+    assert snap["cancelled"] == sum(m["cancelled"] for _, m in outs)
+    assert snap["hedges"] == sum(m["hedges"] for _, m in outs)
+    fleet.close()
+
+
+def test_midstream_duplicate_refused_and_accounted():
+    """An eviction-driven duplicate lands while the stream is mid-flight:
+    first-bytes-wins refuses the rival at its first emit, the flight settles
+    with all chunks from one owner, and the loss is accounted through the
+    same cancellation counters as a non-streaming race."""
+    log = []
+    fleet = _streaming_fleet(chunk_delay=0.03, log=log)
+    fleet.scale_to(1)  # rid 1 drained: only the straggling rid 0 remains
+
+    (fut,) = fleet.submit_many_async(["job"], stream=True)
+    deadline = time.time() + 5.0
+    while fleet.in_flight() == 0 and time.time() < deadline:
+        time.sleep(0.001)
+    assert fleet.in_flight() == 1  # parked in rid 0's pre-stream straggle
+
+    fleet.scale_to(2)  # rid 2 joins; rid 0 then misses its beats
+    for _ in range(fleet.max_missed):
+        fleet.heartbeat(responding={r.rid for r in fleet.live()} - {0})
+
+    out, meta = fut.result(timeout=10.0)
+    snap = _quiesce(fleet)
+    assert out == ("full", "job")
+    chunks = fut.chunks()
+    assert [c[1] for c in chunks] == [0, 1, 2]
+    owner = {c[0] for c in chunks}
+    assert len(owner) == 1  # one replica streamed every chunk
+    assert meta["replica"] in owner and meta["chunks"] == 3
+    assert meta["requeues"] == 1 and snap["requeues"] == 1
+    # the rival attempted exactly one emit, was refused, and stopped
+    refused = [(rid, i) for rid, i, ok in log if not ok]
+    assert refused == [(({0, 2} - owner).pop(), 0)]
+    assert meta["cancelled"] == 1 and snap["cancelled"] == 1
+    fleet.close()
+
+
+def test_sequential_stream_buffers_chunks_for_replay():
+    """max_workers=1: futures come back complete with the chunk log already
+    buffered; a late subscriber replays it in order.  Non-streaming submits
+    on the same replicas still run plain ``execute`` (bit-for-bit result)."""
+    fleet = _streaming_fleet(max_workers=1)
+    fleet.replicas[0].straggle_rate = 0.0
+    futs = fleet.submit_many_async(["a", "b"], stream=True)
+    assert all(f.done() for f in futs)
+    for fut, job in zip(futs, ["a", "b"]):
+        out, meta = fut.result(0)
+        assert out == ("full", job)
+        replayed = []
+        fut.add_chunk_callback(replayed.append)
+        assert replayed == fut.chunks()
+        assert [c[1] for c in replayed] == [0, 1, 2]
+        assert {c[0] for c in replayed} == {meta["replica"]}
+    (fut,) = fleet.submit_many_async(["c"], stream=False)
+    out, _ = fut.result(0)
+    assert out == ("full", "c") and fut.chunks() == []
+    fleet.close()
+
+
+# -- orchestrator streaming: tickets as async iterators ----------------------
+
+
+def test_await_vs_async_for_equivalence(served):
+    """``await ticket`` is unchanged by streaming: iterating the chunks and
+    awaiting yield the same Response (path, accuracy, latency, cost), and
+    the chunk timeline is ordered, cumulative, and stamped on the ticket."""
+    server, test_idx = served
+    qid = int(test_idx[0])
+
+    async def run():
+        orch = server.orchestrator(max_batch=8, max_wait_ms=1.0)
+        await orch.start()
+        t1 = await orch.submit(Request(prompt="", qid=qid))
+        r1 = await t1
+        t2 = await orch.submit(Request(prompt="", qid=qid))
+        chunks = [c async for c in t2]
+        r2 = await t2
+        again = [c async for c in t2]  # exhausted: terminates immediately
+        await orch.stop()
+        return r1, r2, chunks, again, t1, t2
+
+    r1, r2, chunks, again, t1, t2 = asyncio.run(run())
+    assert (r1.path_key, r1.accuracy, r1.latency_s, r1.cost_usd) \
+        == (r2.path_key, r2.accuracy, r2.latency_s, r2.cost_usd)
+    assert chunks and chunks[-1].final and again == []
+    assert [c.index for c in chunks] == list(range(len(chunks)))
+    lats = [c.latency_s for c in chunks]
+    assert lats == sorted(lats)  # cumulative along the chunk timeline
+    assert len(t2.chunk_times) == len(chunks)
+    for t in (t1, t2):  # t1 streamed too, even though nobody iterated it
+        names = [n for n, _ in t.events]
+        assert names.index("dispatched") < names.index("first_chunk") \
+            < names.index("completed")
+        stamps = [ts for _, ts in t.events]
+        assert stamps == sorted(stamps)
+
+
+def test_stream_off_preserves_response_and_skips_chunk_machinery(served):
+    server, test_idx = served
+    qid = int(test_idx[0])
+
+    async def run(stream):
+        orch = server.orchestrator(stream=stream)
+        await orch.start()
+        t = await orch.submit(Request(prompt="", qid=qid))
+        r = await t
+        chunks = [c async for c in t]
+        await orch.stop()
+        return r, chunks, t
+
+    r_on, chunks_on, _ = asyncio.run(run(True))
+    r_off, chunks_off, t_off = asyncio.run(run(False))
+    server.orchestrator(stream=True)  # restore the module fixture's default
+    assert chunks_on and chunks_off == []
+    assert t_off.event("first_chunk") is None
+    # the final Response does not depend on whether chunks were delivered
+    assert (r_on.path_key, r_on.accuracy, r_on.latency_s, r_on.cost_usd) \
+        == (r_off.path_key, r_off.accuracy, r_off.latency_s, r_off.cost_usd)
+
+
+# -- satellite: stop sentinels must not inflate queue depth ------------------
+
+
+def test_stop_sentinel_not_counted_in_queue_depth():
+    async def run():
+        orch = Orchestrator(None, max_queue=4)
+        await orch.start()
+        assert orch.stats()["queue_depth"] == 0
+        stopper = asyncio.create_task(orch.stop())
+        await asyncio.sleep(0)  # stop() has enqueued its sentinel by now
+        d_stopping = orch.stats()["queue_depth"]
+        await stopper
+        d_stopped = orch.stats()["queue_depth"]
+        late = await orch.submit("late")
+        return d_stopping, d_stopped, await late
+
+    d_stopping, d_stopped, shed = asyncio.run(run())
+    # the enqueued sentinel is not backlog — before the fix this read 1
+    assert d_stopping == 0 and d_stopped == 0
+    assert isinstance(shed, Overloaded) and shed.reason == "shutdown"
+    assert shed.queue_depth == 0  # Overloaded carries the corrected depth
+
+
+# -- satellite: deadline-lapsed tickets must not squat on queue capacity -----
+
+
+def test_full_queue_of_expired_tickets_admits_fresh_traffic():
+    async def run():
+        orch = Orchestrator(None, max_queue=4)  # loop not started: no drain
+        stale = [await orch.submit(f"s{i}", deadline_s=0.005)
+                 for i in range(4)]
+        assert not any(t.done() for t in stale)  # queue now full of them
+        await asyncio.sleep(0.02)  # every queued deadline lapses
+        fresh = await orch.submit("fresh")
+        outcomes = [await t for t in stale]
+        return orch, outcomes, fresh
+
+    orch, outcomes, fresh = asyncio.run(run())
+    # the lapsed squatters were purged and shed with their own reason...
+    assert all(isinstance(o, Overloaded) and o.reason == "deadline"
+               for o in outcomes)
+    # ...and the fresh ticket was ADMITTED, not queue_full-shed
+    assert not fresh.done()
+    assert [n for n, _ in fresh.events] == ["admitted"]
+    stats = orch.stats()
+    assert stats["admitted"] == 5 and stats["shed"] == 4
+    assert stats["deadline_shed"] == 4 and stats["queue_depth"] == 1
+
+
+def test_full_queue_of_viable_tickets_still_sheds_overflow():
+    async def run():
+        orch = Orchestrator(None, max_queue=2)
+        for i in range(2):
+            await orch.submit(f"v{i}")  # no deadline: nothing purgeable
+        return await (await orch.submit("overflow"))
+
+    shed = asyncio.run(run())
+    assert isinstance(shed, Overloaded) and shed.reason == "queue_full"
+
+
+# -- split inference: DraftState layout parity + deterministic traces --------
+
+
+def test_draftstate_matches_decode_attention_oracle():
+    """The draft KV cache is in the kernel's exact ``(B, W, Kv, hd)`` layout:
+    the numpy readout, the jnp oracle, and the Pallas entry point agree on
+    the identical buffers at every incremental cache length."""
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    ds = DraftState(seed=0, qid=3, edge=MODEL_CATALOG["internlm2-1.8b"],
+                    n_chunks=5)
+    for t in range(5):
+        ds.append(t)
+        o_np = ds.attend()
+        o_ref = np.asarray(decode_attention_ref(
+            jnp.asarray(ds._q), jnp.asarray(ds.k_cache),
+            jnp.asarray(ds.v_cache), jnp.int32(ds.cache_len)))[0, 0, 0]
+        np.testing.assert_allclose(o_np, o_ref, atol=1e-6)
+        o_kernel = ds.attend(use_kernel=True)
+        np.testing.assert_allclose(o_np, o_kernel, atol=1e-6)
+    with pytest.raises(ValueError, match="out of order"):
+        ds.append(7)
+
+
+def test_generate_split_deterministic_stream_and_cancellation():
+    common = dict(seed=3, qid=7, complexity=0.6,
+                  edge=MODEL_CATALOG["recurrentgemma-2b"],
+                  cloud=MODEL_CATALOG["kimi-k2-cloud"], tau=0.6,
+                  device=EDGE_DEVICES["m4"], prompt_tokens=400,
+                  out_tokens=150, grounding=0.3,
+                  start_latency_s=0.1, start_cost_usd=0.001)
+    chunks = []
+    r = generate_split(**common, emit=lambda c: chunks.append(c) or True)
+    assert generate_split(**common) == r  # emit cannot perturb the trace
+    assert not r.cancelled and r.n_chunks == len(chunks) == 5
+    assert [c.index for c in chunks] == list(range(5))
+    assert sum(c.tokens for c in chunks) == 150 and chunks[-1].final
+    assert {c.source for c in chunks} <= {"edge", "cloud"}
+    assert sum(c.tokens for c in chunks if c.source == "cloud") \
+        == r.cloud_tokens
+    for a, b in zip(chunks, chunks[1:]):  # cumulative timeline
+        assert b.latency_s >= a.latency_s and b.cost_usd >= a.cost_usd
+    assert chunks[-1].cost_usd == r.cost_usd
+
+    got = []
+    r_c = generate_split(**common,
+                         emit=lambda c: got.append(c) or len(got) < 2)
+    assert r_c.cancelled and len(got) == 2
+    assert got == chunks[:2]  # identical spans up to the teardown
+    assert r_c.cost_usd == got[-1].cost_usd  # only generated spans billed
+
+
+def test_split_paths_stream_through_executor(served):
+    """Split paths ride the resolution-path machinery: ``run_stream`` emits
+    edge/cloud spans and settles to the exact ``run`` result; whole-model
+    paths stream decode spans with the same bit-for-bit settlement."""
+    server, _ = served
+    space = server.rps.space
+    split_paths = [p for p in space.paths if p.model.impl == SPLIT_IMPL]
+    assert split_paths, "split=True server lost its split configurations"
+    q = server.domain.queries[5]
+    for path in split_paths[:3]:
+        base = server.executor.run(q, path)
+        chunks = []
+        out = server.executor.run_stream(
+            q, path, lambda c: chunks.append(c) or True)
+        assert out == base
+        assert chunks[-1].final and sum(c.tokens for c in chunks) == 150
+        assert {c.source for c in chunks} <= {"edge", "cloud"}
+
+    whole = next(p for p in space.paths if p.model.impl != SPLIT_IMPL)
+    base = server.executor.run(q, whole)
+    chunks = []
+    assert server.executor.run_stream(
+        q, whole, lambda c: chunks.append(c) or True) == base
+    assert {c.source for c in chunks} == {whole.model.impl}
+    assert all(c.confidence == 1.0 for c in chunks)
+
+    # mid-stream teardown: the emit gate returns False -> no settlement
+    got = []
+    assert server.executor.run_stream(
+        q, split_paths[0], lambda c: got.append(c) or False) is None
+    assert len(got) == 1
