@@ -21,7 +21,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.stages import Stage
 from repro.optim import adamw, constant_schedule
+
+
+def projection_stage(params: dict, *, in_key: str = "emb",
+                     out_key: str = "z") -> Stage:
+    """Device stage wrapping the trained DSQE projection.
+
+    State: the parameter pytree pushed to the device at init.  Adds the
+    unit-norm projection ``carry[out_key]`` (B, d) of ``carry[in_key]``.
+    """
+    def init():
+        state = jax.tree.map(jnp.asarray, params)
+
+        def apply(params_dev, carry):
+            return {**carry, out_key: project(params_dev, carry[in_key])}
+
+        return state, apply
+
+    return Stage("dsqe_project", init)
 
 
 @dataclass
@@ -32,6 +51,10 @@ class DSQE:
 
     def project(self, e: jax.Array) -> jax.Array:
         return project(self.params, e, dropout_rng=None)
+
+    def as_stage(self, *, in_key: str = "emb", out_key: str = "z") -> Stage:
+        """This encoder's frozen projection as a composable device stage."""
+        return projection_stage(self.params, in_key=in_key, out_key=out_key)
 
     def predict_set(self, e: jax.Array) -> jax.Array:
         """Most-similar prototype index per query. e: (..., d)."""

@@ -12,11 +12,16 @@ Online per-query decision:
 
 The whole decision is a handful of matvecs over precomputed tables.
 ``RuntimePathSelector(use_kernel=True)`` routes ``select_batch`` through the
-fused scoring pass in ``repro.kernels.dsqe_score``: DSQE projection, hard
-top-k kNN voting, the tie-break prior, and per-query SLO masking run as one
-jitted program over device-resident tables (the Pallas kernel on TPU, the
-XLA-compiled ref elsewhere); only argmax decoding and the rare
-infeasible-row fallback stay on the host.  Numpy remains the reference
+composed stage pipeline (``repro.kernels.stages``): the DSQE projection,
+train-similarity retrieve (hard top-k kNN), Algorithm-3 score (vote
+scatter, tie-break prior, per-query SLO mask), and argmax decode are
+init/apply stages ``serial``-composed and jitted as ONE device program per
+shape bucket over device-resident state (the Pallas kernels on TPU, the
+XLA-compiled refs elsewhere); only the rare infeasible-row fallback stays
+on the host.  ``select_batch_staged`` runs the SAME stages with a host
+round-trip between each — the fused-vs-staged A/B baseline in
+``benchmarks/select_batch_speedup.py`` — and makes identical decisions by
+construction (same stage applies, same floats).  Numpy remains the reference
 implementation (``use_kernel=False``, and always for single-query
 ``select``).  The two engines make identical decisions modulo exact float
 ties: the fused pass scores in float32 (numpy accumulates in float64), so
@@ -136,7 +141,8 @@ class RuntimePathSelector:
         self.train_best_path = np.array(self.cca.best_path, np.int64)
         rows = np.arange(len(t.query_ids))
         self.train_best_acc = t.accuracy[rows, self.train_best_path]
-        self._kernel_state = None  # device tables + jitted pass, built lazily
+        self._kernel_state = None  # stage state + fused jitted pass, lazy
+        self._staged_state = None  # per-stage jits for the staged A/B path
         # number of times the jitted scoring pass was (re)traced; with
         # shape-bucketed padding this is bounded by the distinct buckets
         # seen, not the distinct batch sizes (regression-tested)
@@ -149,15 +155,52 @@ class RuntimePathSelector:
 
     # -- fused-kernel scoring pass --------------------------------------------
 
-    def _ensure_kernel(self):
-        """Device-resident tables + the jitted end-to-end scoring pass.
+    def _selection_stages(self):
+        """The four composable init/apply stages of the selection pipeline.
 
-        Built once: every table the decision needs (prototypes, projected
-        train embeddings, kNN vote weights, containment, latency/cost,
-        prior, validity) is pushed to the default device as float32, and the
-        DSQE projection + fused score is jitted as one program.  Each batch
-        then costs one host->device transfer of (B, d) embeddings and (B, 2)
-        SLOs and one device->host read of scores + set ids.
+        ``embed -> retrieve -> score -> argmax`` as ``kernels.stages``
+        Stage values; ``serial`` of these is the fused program,
+        stage-by-stage execution is the staged A/B baseline.  SLO
+        feasibility compares float32 on device but float64 in numpy: the
+        latency/cost tables are rounded UP to float32 here (and the
+        per-query thresholds DOWN, in ``_pad_bucket``) so the device engine
+        can only be *stricter* — it never admits a path the float64 oracle
+        rejects.
+        """
+        from repro.kernels.common import NEG_INF
+        from repro.kernels.stages import (decode_stage, retrieve_stage,
+                                          score_stage)
+
+        # masked entries come back as NEG_INF; anything above half of it is
+        # a real (feasible) score — the constant is shared with kernel/ref
+        self._kernel_floor = NEG_INF / 2
+
+        N, P = len(self.table.query_ids), len(self.table.paths)
+        pathw = np.zeros((N, P), np.float32)
+        pathw[np.arange(N), self.train_best_path] = np.nan_to_num(self.train_best_acc)
+        return [
+            self.dsqe.as_stage(in_key="emb", out_key="z"),
+            retrieve_stage(np.asarray(self.train_emb_proj, np.float32),
+                           k=min(self.knn, N), query_key="z"),
+            score_stage(self._protos_unit, pathw, self.path_contains_set,
+                        _f32_ceil(self.path_latency),
+                        _f32_ceil(self.path_cost),
+                        1e-3 * self.path_mean_acc, self.path_evaluated,
+                        query_key="z", slo_key="slo"),
+            decode_stage(self._kernel_floor),
+        ]
+
+    def _ensure_kernel(self):
+        """Composed stage state + the ONE jitted end-to-end selection pass.
+
+        Built once: every stage's init pushes its state (DSQE parameters,
+        projected train embeddings, prototypes, kNN vote weights,
+        containment, latency/cost, prior, validity) to the default device
+        as float32, and ``serial(...)`` composes the four applies so
+        embed -> retrieve -> score -> argmax traces as a single program.
+        Each batch then costs one host->device transfer of (B, d)
+        embeddings and (B, 2) SLOs and one device->host read of the
+        decision arrays — no host hop between stages.
         """
         if self._kernel_state is not None:
             return self._kernel_state
@@ -168,54 +211,52 @@ class RuntimePathSelector:
 
     def _build_kernel_state(self):
         import jax
-        import jax.numpy as jnp
 
-        from repro.core.dsqe import project
-        from repro.kernels.dsqe_score.ops import dsqe_score
-        from repro.kernels.dsqe_score.ref import NEG_INF
+        from repro.kernels.stages import serial
 
-        # masked rows come back as NEG_INF; anything above half of it is a
-        # real (feasible) score — the constant is shared with kernel/ref
-        self._kernel_floor = NEG_INF / 2
+        state, fused_apply = serial(*self._selection_stages()).init()
 
-        N, P = len(self.table.query_ids), len(self.table.paths)
-        pathw = np.zeros((N, P), np.float32)
-        pathw[np.arange(N), self.train_best_path] = np.nan_to_num(self.train_best_acc)
-        # SLO feasibility compares float32 in-kernel but float64 in numpy:
-        # round the latency/cost tables UP to float32 (and the thresholds
-        # DOWN, in _score_batch_kernel) so the kernel can only be stricter —
-        # it never admits a path the float64 oracle would reject
-        tables = tuple(jnp.asarray(x, jnp.float32) for x in (
-            self._protos_unit, pathw, self.path_contains_set,
-            _f32_ceil(self.path_latency), _f32_ceil(self.path_cost),
-            1e-3 * self.path_mean_acc, self.path_evaluated))
-        params = jax.tree.map(jnp.asarray, self.dsqe.params)
-        train_proj = jnp.asarray(self.train_emb_proj, jnp.float32)
-        knn = min(self.knn, N)
-
-        def _pass(params, embs, slo, train, protos, pathw, contains, lat,
-                  cost, prior, valid):
+        def _pass(state, embs, slo):
             self.kernel_trace_count += 1  # runs at trace time only
-            z = project(params, embs)  # (B, d) unit-norm DSQE projection
-            return dsqe_score(z, protos, train, pathw, contains, lat, cost,
-                              prior, valid, slo, knn=knn)
+            carry = fused_apply(state, {"emb": embs, "slo": slo})
+            return (carry["scores"], carry["set_id"], carry["best"],
+                    carry["feasible"])
 
-        self._kernel_state = (params, (train_proj,) + tables, jax.jit(_pass))
+        self._kernel_state = (state, jax.jit(_pass))
         return self._kernel_state
 
-    def _score_batch_kernel(self, embs: np.ndarray, max_lat: np.ndarray,
-                            max_cost: np.ndarray):
-        """One jitted pass: (B, P) masked scores + (B,) set ids as numpy.
+    def _ensure_staged(self):
+        """Per-stage jits for the staged A/B baseline (lazy, built once).
+
+        The SAME stage list as the fused program, but each apply is jitted
+        separately so ``select_batch_staged`` pays a host round-trip at
+        every stage boundary — the dispatch pattern the fused refactor
+        exists to kill.  Does not touch ``kernel_trace_count``.
+        """
+        if self._staged_state is not None:
+            return self._staged_state
+        with self._kernel_build_lock:
+            if self._staged_state is None:
+                import jax
+
+                self._staged_state = [
+                    (st, jax.jit(ap))
+                    for st, ap in (s.init() for s in self._selection_stages())]
+        return self._staged_state
+
+    def _pad_bucket(self, embs: np.ndarray, max_lat: np.ndarray,
+                    max_cost: np.ndarray):
+        """Bucket-pad a batch for the device engines.
 
         The query batch is padded up to its power-of-two bucket
         (``bucket_batch``) so varying micro-batch sizes reuse one jit trace
         per bucket instead of retracing per distinct B.  Pad rows are zero
-        queries with unconstrained SLOs; every per-row stage of the fused
-        pass is row-independent and the pad rows are sliced off here, before
-        decode, so they can neither retrace nor leak into any decision.
+        queries with IMPOSSIBLE (-inf) SLOs — all-infeasible by
+        construction, so even before being sliced off they can never
+        surface a decision — and every stage is row-independent, so they
+        cannot leak into real rows either.  Returns (embs32 (Bb,d),
+        slo32 (Bb,2), B).
         """
-        import jax.numpy as jnp
-
         B = embs.shape[0]
         Bb = bucket_batch(B)
         lat32, cost32 = _f32_floor(max_lat), _f32_floor(max_cost)
@@ -225,14 +266,23 @@ class RuntimePathSelector:
             embs32 = np.concatenate(
                 [embs32, np.zeros((pad, embs32.shape[1]), np.float32)])
             lat32 = np.concatenate(
-                [lat32, np.full(pad, np.inf, np.float32)])
+                [lat32, np.full(pad, -np.inf, np.float32)])
             cost32 = np.concatenate(
-                [cost32, np.full(pad, np.inf, np.float32)])
-        params, tables, score_pass = self._ensure_kernel()
-        slo = jnp.asarray(np.stack([lat32, cost32], axis=1))
-        scores, set_ids = score_pass(params, jnp.asarray(embs32), slo,
-                                     *tables)
-        return np.asarray(scores)[:B], np.asarray(set_ids, np.int64)[:B]
+                [cost32, np.full(pad, -np.inf, np.float32)])
+        return embs32, np.stack([lat32, cost32], axis=1).astype(np.float32), B
+
+    def _score_batch_kernel(self, embs: np.ndarray, max_lat: np.ndarray,
+                            max_cost: np.ndarray):
+        """One jitted pass: masked scores (B, P), set ids, argmax decisions
+        and feasibility flags (B,), all as numpy with pad rows sliced off."""
+        import jax.numpy as jnp
+
+        embs32, slo32, B = self._pad_bucket(embs, max_lat, max_cost)
+        state, score_pass = self._ensure_kernel()
+        scores, set_ids, best, feas = score_pass(
+            state, jnp.asarray(embs32), jnp.asarray(slo32))
+        return (np.asarray(scores)[:B], np.asarray(set_ids, np.int64)[:B],
+                np.asarray(best, np.int64)[:B], np.asarray(feas)[:B])
 
     # -- Algorithm 3 ----------------------------------------------------------
 
@@ -319,6 +369,45 @@ class RuntimePathSelector:
         ~1 ulp of each other.
         """
         t0 = time.perf_counter()
+        embs, slo_list, max_lat, max_cost = self._batch_inputs(query_embs, slos)
+
+        if self.use_kernel:
+            # thin driver over the fused program: scores, set ids, argmax
+            # decisions and feasibility all come back from ONE device pass
+            _, set_ids, best, has_feasible = self._score_batch_kernel(
+                embs, max_lat, max_cost)
+        else:
+            scores, set_ids = self._score_batch_numpy(embs, max_lat, max_cost)
+            best = np.argmax(scores, axis=1)
+            has_feasible = scores[np.arange(embs.shape[0]), best] > -np.inf
+        return self._decisions(slo_list, set_ids, best, has_feasible, t0)
+
+    def select_batch_staged(self, query_embs: np.ndarray, slos) -> list[Decision]:
+        """A/B baseline: the SAME four stages as the fused engine, executed
+        one jitted stage at a time with a full host round-trip (device ->
+        numpy -> device) at every stage boundary.  Decisions are identical
+        to ``select_batch(use_kernel=True)`` by construction — same stage
+        applies over the same float32 state — this path only exists to
+        measure what the per-bucket fusion buys (see
+        ``benchmarks/select_batch_speedup.py``)."""
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        embs, slo_list, max_lat, max_cost = self._batch_inputs(query_embs, slos)
+        embs32, slo32, B = self._pad_bucket(embs, max_lat, max_cost)
+        carry = {"emb": jnp.asarray(embs32), "slo": jnp.asarray(slo32)}
+        for state, apply in self._ensure_staged():
+            carry = apply(state, carry)
+            # the host hop the fused program eliminates: pull every carry
+            # array to numpy, push it back
+            carry = {key: jnp.asarray(np.asarray(v))
+                     for key, v in carry.items()}
+        set_ids = np.asarray(carry["set_id"], np.int64)[:B]
+        best = np.asarray(carry["best"], np.int64)[:B]
+        has_feasible = np.asarray(carry["feasible"])[:B]
+        return self._decisions(slo_list, set_ids, best, has_feasible, t0)
+
+    def _batch_inputs(self, query_embs, slos):
         embs = np.asarray(query_embs)
         B = embs.shape[0]
         slo_list = [slos] * B if isinstance(slos, SLO) else list(slos)
@@ -326,16 +415,12 @@ class RuntimePathSelector:
             raise ValueError(f"got {len(slo_list)} SLOs for {B} queries")
         max_lat = np.array([s.max_latency_s for s in slo_list])
         max_cost = np.array([s.max_cost_usd for s in slo_list])
+        return embs, slo_list, max_lat, max_cost
 
-        if self.use_kernel:
-            scores, set_ids = self._score_batch_kernel(embs, max_lat, max_cost)
-            floor = self._kernel_floor
-        else:
-            scores, set_ids = self._score_batch_numpy(embs, max_lat, max_cost)
-            floor = -np.inf
-        best = np.argmax(scores, axis=1)
-        has_feasible = scores[np.arange(B), best] > floor
-
+    def _decisions(self, slo_list, set_ids, best, has_feasible,
+                   t0: float) -> list[Decision]:
+        """Shared epilogue: host-side OOD fallback + Decision construction."""
+        B = len(slo_list)
         set_l, best_l, feas_l = set_ids.tolist(), best.tolist(), has_feasible.tolist()
         picks: list[tuple[int, bool]] = []
         for b in range(B):

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Compute hot-spots the paper's serving stack optimizes with custom
+# Pallas kernels.  Each op lives in its own package (<name>/kernel.py +
+# ops.py + ref.py); shared dispatch/padding policy is in common.py and
+# the init/apply stage composition layer (serial of embed -> retrieve ->
+# score -> argmax as ONE jitted program) is in stages.py.

@@ -3,6 +3,9 @@
 Layout contract: model caches are (B, W, Kv, hd); the kernel wants
 (B, Kv, W, hd) with queries grouped per kv head (B, Kv, G, hd), head_dim
 padded to the 128-lane multiple, and W padded to the k block.
+
+Dispatch (``common.resolve_interpret``): interpret mode off-TPU, resolved
+in the un-jitted wrapper so the jit cache keys on the resolved bool.
 """
 from __future__ import annotations
 
@@ -11,14 +14,49 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.decode_attention.kernel import decode_attention_kernel
 
 
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("ring", "chunk_attn", "block_k", "interpret"))
+def _decode_attention_jit(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, W, Kv, hd)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # scalar int32
+    *,
+    ring: bool,
+    chunk_attn: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    B, _, H, hd = q.shape
+    W, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+
+    qg = q.reshape(B, 1, Kv, G, hd)[:, 0]  # (B, Kv, G, hd)
+    kt = k_cache.transpose(0, 2, 1, 3)  # (B, Kv, W, hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    # pad head_dim to 128 lanes
+    qg, _ = common.pad_dim(qg, 3, 128)
+    kt, _ = common.pad_dim(kt, 3, 128)
+    vt, _ = common.pad_dim(vt, 3, 128)
+    block_k = min(block_k, W)
+    if W % block_k:
+        # NOTE: ring masking assumes width == W; padded slots must be dead.
+        assert not ring, "ring caches must be block-aligned"
+        kt, _ = common.pad_dim(kt, 2, block_k)
+        vt, _ = common.pad_dim(vt, 2, block_k)
+
+    out = decode_attention_kernel(
+        qg, kt, vt, jnp.asarray(cache_len, jnp.int32).reshape(1),
+        ring=ring, chunk_attn=chunk_attn, block_k=block_k, interpret=interpret,
+        scale=1.0 / (hd ** 0.5),
+    )
+    return out[..., :hd].reshape(B, 1, H, hd)
+
+
 def decode_attention(
     q: jax.Array,  # (B, 1, H, hd)
     k_cache: jax.Array,  # (B, W, Kv, hd)
@@ -30,33 +68,6 @@ def decode_attention(
     block_k: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    if interpret is None:
-        interpret = not _is_tpu()
-    B, _, H, hd = q.shape
-    W, Kv = k_cache.shape[1], k_cache.shape[2]
-    G = H // Kv
-
-    qg = q.reshape(B, 1, Kv, G, hd)[:, 0]  # (B, Kv, G, hd)
-    kt = k_cache.transpose(0, 2, 1, 3)  # (B, Kv, W, hd)
-    vt = v_cache.transpose(0, 2, 1, 3)
-
-    # pad head_dim to 128 lanes
-    pad_hd = (-hd) % 128
-    if pad_hd:
-        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad_hd)))
-        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, pad_hd)))
-        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, 0), (0, pad_hd)))
-    block_k = min(block_k, W)
-    pad_w = (-W) % block_k
-    if pad_w:
-        # NOTE: ring masking assumes width == W; padded slots must be dead.
-        assert not ring, "ring caches must be block-aligned"
-        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_w), (0, 0)))
-        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_w), (0, 0)))
-
-    out = decode_attention_kernel(
-        qg, kt, vt, jnp.asarray(cache_len, jnp.int32).reshape(1),
-        ring=ring, chunk_attn=chunk_attn, block_k=block_k, interpret=interpret,
-        scale=1.0 / (hd ** 0.5),
-    )
-    return out[..., :hd].reshape(B, 1, H, hd)
+    return _decode_attention_jit(
+        q, k_cache, v_cache, cache_len, ring=ring, chunk_attn=chunk_attn,
+        block_k=block_k, interpret=common.resolve_interpret(interpret))

@@ -1,10 +1,11 @@
 """Public wrapper for the fused RPS scoring kernel.
 
-Dispatch: on TPU the fused Pallas kernel runs compiled (lane/sublane padding
-handled here); on CPU/GPU the pure-jnp ref — same semantics, same tie
-contract — is used instead so the path stays XLA-compiled rather than
-falling into the slow Pallas interpreter.  Pass ``interpret=True`` to force
-the Pallas kernel body through the interpreter (kernel validation tests).
+Dispatch (``common.dispatch_pallas``): on TPU the fused Pallas kernel runs
+compiled (lane/sublane padding handled here); on CPU/GPU the pure-jnp ref —
+same semantics, same tie contract — is used instead so the path stays
+XLA-compiled rather than falling into the slow Pallas interpreter.  Pass
+``interpret=True`` to force the Pallas kernel body through the interpreter
+(kernel validation tests).
 """
 from __future__ import annotations
 
@@ -13,22 +14,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import dispatch_pallas, pad2, pad_dim
 from repro.kernels.dsqe_score.kernel import dsqe_score_kernel
 from repro.kernels.dsqe_score.ref import dsqe_score_ref
 
 _ref_jit = functools.partial(jax.jit, static_argnames=("knn",))(dsqe_score_ref)
 
-
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad2(x, m0, m1, fill=0.0):
-    p0 = (-x.shape[0]) % m0
-    p1 = (-x.shape[1]) % m1
-    if p0 or p1:
-        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=fill)
-    return x
+# train-embedding tile (rows) streamed through VMEM per grid step; tables
+# at or under one tile stay single-block (no behavior change at test scale)
+_BLOCK_N = 512
 
 
 def dsqe_score(q, protos, train, path_weights, contains, lat, cost,
@@ -42,26 +36,31 @@ def dsqe_score(q, protos, train, path_weights, contains, lat, cost,
     """
     Bq, P = q.shape[0], path_weights.shape[1]
     slo = jnp.broadcast_to(jnp.asarray(slo, jnp.float32).reshape(-1, 2), (Bq, 2))
-    if interpret is None and not _is_tpu():
+    if not dispatch_pallas(interpret):
         return _ref_jit(q, protos, train, path_weights, contains,
                         lat, cost, prior, valid, slo, knn=knn)
     interpret = bool(interpret)
     # pad the query batch so the kernel's block_q = min(128, Bq) divides it
     bq_mult = 128 if Bq > 128 else 8
-    q_p = _pad2(q, bq_mult, 128)
-    protos_p = _pad2(protos, 8, 128)  # kernel masks rows >= k_valid
-    train_p = _pad2(train, 8, 128)  # kernel masks rows >= n_valid
-    pw_p = _pad2(path_weights, train_p.shape[0], 128)[: train_p.shape[0]]
-    ct_p = _pad2(contains, protos_p.shape[0], 128)[: protos_p.shape[0]]
+    q_p = pad2(q, bq_mult, 128)
+    protos_p = pad2(protos, 8, 128)  # kernel masks rows >= k_valid
+    train_p = pad2(train, 8, 128)  # kernel masks rows >= n_valid
+    if train_p.shape[0] > _BLOCK_N:  # stream: rows must tile evenly
+        train_p, _ = pad_dim(train_p, 0, _BLOCK_N)
+    pw_p = pad2(path_weights, train_p.shape[0], 128)[: train_p.shape[0]]
+    ct_p = pad2(contains, protos_p.shape[0], 128)[: protos_p.shape[0]]
     # padded path lanes: valid=0 keeps them infeasible regardless of SLO
-    lat_p = _pad2(lat.reshape(1, -1), 1, 128, fill=jnp.inf)
-    cost_p = _pad2(cost.reshape(1, -1), 1, 128, fill=jnp.inf)
-    prior_p = _pad2(prior.reshape(1, -1), 1, 128)
-    valid_p = _pad2(valid.reshape(1, -1), 1, 128)
-    slo_p = _pad2(slo, q_p.shape[0], 128)
+    lat_p = pad2(lat.reshape(1, -1), 1, 128, fill=jnp.inf)
+    cost_p = pad2(cost.reshape(1, -1), 1, 128, fill=jnp.inf)
+    prior_p = pad2(prior.reshape(1, -1), 1, 128)
+    valid_p = pad2(valid.reshape(1, -1), 1, 128)
+    # pad ROWS with -inf SLOs so a padded query admits no path at all: the
+    # rows are sliced off below, but the losing fill means a stage boundary
+    # can never surface a pad-row decision even if a caller forgets to slice
+    slo_p = pad2(slo, q_p.shape[0], 128, fill=-jnp.inf)
     scores, set_id = dsqe_score_kernel(
         q_p, protos_p, train_p, pw_p, ct_p, lat_p, cost_p, prior_p, valid_p,
-        slo_p, knn=knn, interpret=interpret,
+        slo_p, knn=knn, block_n=_BLOCK_N, interpret=interpret,
         k_valid=protos.shape[0], n_valid=train.shape[0],
     )
     return scores[:Bq, :P], set_id[:Bq, 0]

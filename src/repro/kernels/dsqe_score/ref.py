@@ -7,6 +7,14 @@ vectors, and the evaluated-path validity mask.  This is both the test oracle
 for the Pallas kernel and the XLA fast path `ops.dsqe_score` compiles on
 non-TPU backends.
 
+The ref is factored the same way the stage pipeline is
+(``kernels/stages.py``): ``dsqe_score_ref`` = train-similarity top-k (the
+exact computation ``retrieval_topk_ref`` performs) + ``dsqe_score_from_topk``
+(vote scatter, prior, feasibility).  The score stage consumes the retrieve
+stage's top-k through the SAME ``dsqe_score_from_topk``, so the composed
+fused program and this monolithic ref are bit-identical on CPU by
+construction, not by tolerance.
+
 Tie semantics (pinned by tests): the critical set is the FIRST argmax
 prototype (matching ``np.argmax``), and when training similarities tie
 EXACTLY at the k-boundary the lowest-index training row wins
@@ -21,7 +29,42 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.kernels.common import NEG_INF
+
+__all__ = ["NEG_INF", "dsqe_score_from_topk", "dsqe_score_ref"]
+
+
+def dsqe_score_from_topk(z, topk_vals, topk_ids, protos, path_weights,
+                         contains, lat, cost, prior, valid, slo):
+    """Masked path scores + critical-set ids from precomputed kNN top-k.
+
+    ``z`` (Bq, d) projected queries; ``topk_vals``/``topk_ids`` (Bq, k) the
+    train-similarity top-k (descending, lowest-index ties first); remaining
+    tables as in ``dsqe_score_ref``.  ``slo`` must already be (Bq, 2)
+    float32.  Returns (scores (Bq, P), set_id (Bq,) int32).
+    """
+    Bq = z.shape[0]
+    N = path_weights.shape[0]
+    lat = lat.reshape(1, -1)
+    cost = cost.reshape(1, -1)
+    prior = prior.reshape(1, -1)
+    valid = valid.reshape(1, -1)
+
+    psims = z @ protos.T  # (Bq, K)
+    set_id = jnp.argmax(psims, axis=1)  # first max wins on exact ties
+    set_onehot = jax.nn.one_hot(set_id, protos.shape[0], dtype=jnp.float32)
+
+    w = jnp.maximum(topk_vals, 0.0)
+    # scatter the k vote weights back over N via a dense one-hot contraction
+    # (XLA CPU lowers this ~30% faster than an .at[].add scatter)
+    onehot = jax.nn.one_hot(topk_ids, N, dtype=jnp.float32)  # (Bq,k,N)
+    votes = jnp.einsum("bkn,bk->bn", onehot, w)
+    scores = votes @ path_weights + prior
+
+    feas_set = set_onehot @ contains
+    feasible = ((feas_set > 0.5) & (valid > 0.5)
+                & (lat <= slo[:, 0:1]) & (cost <= slo[:, 1:2]))
+    return jnp.where(feasible, scores, NEG_INF), set_id.astype(jnp.int32)
 
 
 def dsqe_score_ref(q, protos, train, path_weights, contains, lat, cost,
@@ -34,27 +77,9 @@ def dsqe_score_ref(q, protos, train, path_weights, contains, lat, cost,
     [max_latency, max_cost].  Returns (scores (Bq,P), set_id (Bq,)).
     """
     Bq = q.shape[0]
-    lat = lat.reshape(1, -1)
-    cost = cost.reshape(1, -1)
-    prior = prior.reshape(1, -1)
-    valid = valid.reshape(1, -1)
     slo = jnp.broadcast_to(jnp.asarray(slo, jnp.float32).reshape(-1, 2), (Bq, 2))
-
-    psims = q @ protos.T  # (Bq, K)
-    set_id = jnp.argmax(psims, axis=1)  # first max wins on exact ties
-    set_onehot = jax.nn.one_hot(set_id, protos.shape[0], dtype=jnp.float32)
-
-    tsims = q @ train.T  # (Bq, N)
+    tsims = q @ train.T  # (Bq, N) — same GEMM as retrieval_topk_ref
     k = min(knn, train.shape[0])
     vals, idx = jax.lax.top_k(tsims, k)  # stable: lowest index first on ties
-    w = jnp.maximum(vals, 0.0)
-    # scatter the k vote weights back over N via a dense one-hot contraction
-    # (XLA CPU lowers this ~30% faster than an .at[].add scatter)
-    onehot = jax.nn.one_hot(idx, train.shape[0], dtype=jnp.float32)  # (Bq,k,N)
-    votes = jnp.einsum("bkn,bk->bn", onehot, w)
-    scores = votes @ path_weights + prior
-
-    feas_set = set_onehot @ contains
-    feasible = ((feas_set > 0.5) & (valid > 0.5)
-                & (lat <= slo[:, 0:1]) & (cost <= slo[:, 1:2]))
-    return jnp.where(feasible, scores, NEG_INF), set_id.astype(jnp.int32)
+    return dsqe_score_from_topk(q, vals, idx, protos, path_weights, contains,
+                                lat, cost, prior, valid, slo)

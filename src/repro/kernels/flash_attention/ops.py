@@ -6,7 +6,9 @@ Handles the layout/padding contract:
   * head_dim padded to a lane multiple (128),
   * sequence padded to the block size (masked via kv_valid).
 
-On non-TPU backends the kernel runs in interpret mode (correctness path).
+Dispatch (``common.resolve_interpret``): on non-TPU backends the kernel
+runs in interpret mode (correctness path).  Resolution happens in the
+un-jitted wrapper so the jit cache keys on the resolved bool.
 """
 from __future__ import annotations
 
@@ -15,27 +17,53 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
-
-
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
-    size = x.shape[axis]
-    target = ((size + mult - 1) // mult) * mult
-    if target == size:
-        return x, size
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, target - size)
-    return jnp.pad(x, pad), size
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "chunk_attn", "block_q", "block_k", "interpret"),
 )
+def _flash_attention_jit(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, Kv, hd)
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int,
+    chunk_attn: int,
+    block_q: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    if H != Kv:
+        k = jnp.repeat(k, H // Kv, axis=2)
+        v = jnp.repeat(v, H // Kv, axis=2)
+
+    q_t = q.transpose(0, 2, 1, 3)
+    k_t = k.transpose(0, 2, 1, 3)
+    v_t = v.transpose(0, 2, 1, 3)
+    q_t, _ = common.pad_dim(q_t, 3, 128)
+    k_t, _ = common.pad_dim(k_t, 3, 128)
+    v_t, _ = common.pad_dim(v_t, 3, 128)
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(k_t.shape[2], 8))
+    q_t, sq_valid = common.pad_dim(q_t, 2, block_q)
+    k_t, kv_valid = common.pad_dim(k_t, 2, block_k)
+    v_t, _ = common.pad_dim(v_t, 2, block_k)
+
+    out = flash_attention_kernel(
+        q_t, k_t, v_t, causal=causal, window=window, chunk_attn=chunk_attn,
+        block_q=block_q, block_k=block_k, kv_valid=kv_valid, interpret=interpret,
+        scale=1.0 / (hd ** 0.5),
+    )
+    return out[:, :, :Sq, :hd].transpose(0, 2, 1, 3)
+
+
 def flash_attention(
     q: jax.Array,  # (B, Sq, H, hd)
     k: jax.Array,  # (B, Skv, Kv, hd)
@@ -48,30 +76,7 @@ def flash_attention(
     block_k: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    if interpret is None:
-        interpret = not _is_tpu()
-    B, Sq, H, hd = q.shape
-    Kv = k.shape[2]
-    if H != Kv:
-        k = jnp.repeat(k, H // Kv, axis=2)
-        v = jnp.repeat(v, H // Kv, axis=2)
-
-    q_t = q.transpose(0, 2, 1, 3)
-    k_t = k.transpose(0, 2, 1, 3)
-    v_t = v.transpose(0, 2, 1, 3)
-    q_t, _ = _pad_to(q_t, 3, 128)
-    k_t, _ = _pad_to(k_t, 3, 128)
-    v_t, _ = _pad_to(v_t, 3, 128)
-
-    block_q = min(block_q, max(Sq, 8))
-    block_k = min(block_k, max(k_t.shape[2], 8))
-    q_t, sq_valid = _pad_to(q_t, 2, block_q)
-    k_t, kv_valid = _pad_to(k_t, 2, block_k)
-    v_t, _ = _pad_to(v_t, 2, block_k)
-
-    out = flash_attention_kernel(
-        q_t, k_t, v_t, causal=causal, window=window, chunk_attn=chunk_attn,
-        block_q=block_q, block_k=block_k, kv_valid=kv_valid, interpret=interpret,
-        scale=1.0 / (hd ** 0.5),
-    )
-    return out[:, :, :Sq, :hd].transpose(0, 2, 1, 3)
+    return _flash_attention_jit(
+        q, k, v, causal=causal, window=window, chunk_attn=chunk_attn,
+        block_q=block_q, block_k=block_k,
+        interpret=common.resolve_interpret(interpret))

@@ -1,42 +1,37 @@
-"""Public wrapper for the grouped expert matmul (padding + dtype policy)."""
+"""Public wrapper for the grouped expert matmul (padding + dtype policy).
+
+Dispatch (``common.resolve_interpret``): interpret mode off-TPU, resolved
+in the un-jitted wrapper so the jit cache keys on the resolved bool.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.moe_gmm.kernel import moe_gmm_kernel
 
 
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad_dim(x, axis, mult):
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if not pad:
-        return x, size
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths), size
-
-
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
-def moe_gmm(x: jax.Array, w: jax.Array, *, block_m: int = 128, block_n: int = 128,
-            block_k: int = 512, interpret: bool | None = None) -> jax.Array:
-    if interpret is None:
-        interpret = not _is_tpu()
+def _moe_gmm_jit(x: jax.Array, w: jax.Array, *, block_m: int, block_n: int,
+                 block_k: int, interpret: bool) -> jax.Array:
     E, C, D = x.shape
     F = w.shape[2]
     block_m = min(block_m, max(8, C))
     block_n = min(block_n, max(128, 8))
     block_k = min(block_k, D)
-    x, c0 = _pad_dim(x, 1, block_m)
-    x, d0 = _pad_dim(x, 2, block_k)
-    w, _ = _pad_dim(w, 1, block_k)
-    w, f0 = _pad_dim(w, 2, block_n)
+    x, c0 = common.pad_dim(x, 1, block_m)
+    x, d0 = common.pad_dim(x, 2, block_k)
+    w, _ = common.pad_dim(w, 1, block_k)
+    w, f0 = common.pad_dim(w, 2, block_n)
     out = moe_gmm_kernel(x, w, block_m=block_m, block_n=block_n,
                          block_k=block_k, interpret=interpret)
     return out[:, :c0, :f0]
+
+
+def moe_gmm(x: jax.Array, w: jax.Array, *, block_m: int = 128, block_n: int = 128,
+            block_k: int = 512, interpret: bool | None = None) -> jax.Array:
+    return _moe_gmm_jit(x, w, block_m=block_m, block_n=block_n,
+                        block_k=block_k,
+                        interpret=common.resolve_interpret(interpret))

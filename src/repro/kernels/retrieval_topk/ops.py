@@ -1,6 +1,6 @@
 """Public wrapper for the batched retrieval top-k kernel.
 
-Dispatch (the ``dsqe_score`` pattern): on TPU the fused Pallas kernel runs
+Dispatch (``common.dispatch_pallas``): on TPU the fused Pallas kernel runs
 compiled (lane/sublane padding handled here); on CPU/GPU the pure-jnp ref —
 same semantics, same lowest-id tie contract — is used instead so the path
 stays XLA-compiled rather than falling into the slow Pallas interpreter.
@@ -12,24 +12,16 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import dispatch_pallas, pad2, pad_dim
 from repro.kernels.retrieval_topk.kernel import retrieval_topk_kernel
 from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
 
 _ref_jit = functools.partial(jax.jit, static_argnames=("k",))(retrieval_topk_ref)
 
-
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad2(x, m0, m1, fill=0.0):
-    p0 = (-x.shape[0]) % m0
-    p1 = (-x.shape[1]) % m1
-    if p0 or p1:
-        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=fill)
-    return x
+# corpus tile (rows) streamed through VMEM per grid step; corpora at or
+# under one tile stay single-block (no behavior change at small scale)
+_BLOCK_N = 512
 
 
 def retrieval_topk(q, corpus, *, k: int, interpret: bool | None = None):
@@ -40,14 +32,17 @@ def retrieval_topk(q, corpus, *, k: int, interpret: bool | None = None):
     """
     Bq, n = q.shape[0], corpus.shape[0]
     k = min(k, n)
-    if interpret is None and not _is_tpu():
+    if not dispatch_pallas(interpret):
         return _ref_jit(q, corpus, k=k)
     interpret = bool(interpret)
     # pad the query batch so the kernel's block_q = min(128, Bq) divides it,
-    # and the corpus to TPU tile shape; n_valid masks padded rows
+    # and the corpus to TPU tile shape; n_valid masks padded rows IN-KERNEL
+    # (zero-fill is safe here only because of that mask — see common.py)
     bq_mult = 128 if Bq > 128 else 8
-    q_p = _pad2(q, bq_mult, 128)
-    corpus_p = _pad2(corpus, 8, 128)[:, : q_p.shape[1]]
+    q_p = pad2(q, bq_mult, 128)
+    corpus_p = pad2(corpus, 8, 128)[:, : q_p.shape[1]]
+    if corpus_p.shape[0] > _BLOCK_N:  # stream: rows must tile evenly
+        corpus_p, _ = pad_dim(corpus_p, 0, _BLOCK_N)
     vals, ids = retrieval_topk_kernel(
-        q_p, corpus_p, k=k, interpret=interpret, n_valid=n)
+        q_p, corpus_p, k=k, block_n=_BLOCK_N, interpret=interpret, n_valid=n)
     return vals[:Bq], ids[:Bq]

@@ -15,7 +15,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.kernels.common import NEG_INF
+
+__all__ = ["NEG_INF", "retrieval_topk_ref"]
 
 
 def retrieval_topk_ref(q, corpus, *, k: int):

@@ -1,31 +1,33 @@
-"""Public wrapper for the RG-LRU scan kernel (padding to lane multiples)."""
+"""Public wrapper for the RG-LRU scan kernel (padding to lane multiples).
+
+Dispatch (``common.resolve_interpret``): interpret mode off-TPU, resolved
+in the un-jitted wrapper so the jit cache keys on the resolved bool.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.rglru_scan.kernel import rglru_scan_kernel
 
 
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def rglru_scan_op(a: jax.Array, x: jax.Array, h0: jax.Array, *,
-                  chunk: int = 256, interpret: bool | None = None) -> jax.Array:
-    if interpret is None:
-        interpret = not _is_tpu()
+def _rglru_scan_jit(a: jax.Array, x: jax.Array, h0: jax.Array, *,
+                    chunk: int, interpret: bool) -> jax.Array:
     B, S, R = a.shape
-    pad_r = (-R) % 128
     chunk = min(chunk, S)
-    pad_s = (-S) % chunk
-    if pad_r or pad_s:
-        pad3 = ((0, 0), (0, pad_s), (0, pad_r))
-        a = jnp.pad(a, pad3)
-        x = jnp.pad(x, pad3)
-        h0 = jnp.pad(h0, ((0, 0), (0, pad_r)))
+    a, _ = common.pad_dim(a, 2, 128)
+    x, _ = common.pad_dim(x, 2, 128)
+    h0, _ = common.pad_dim(h0, 1, 128)
+    a, _ = common.pad_dim(a, 1, chunk)
+    x, _ = common.pad_dim(x, 1, chunk)
     out = rglru_scan_kernel(a, x, h0, chunk=chunk, interpret=interpret)
     return out[:, :S, :R]
+
+
+def rglru_scan_op(a: jax.Array, x: jax.Array, h0: jax.Array, *,
+                  chunk: int = 256, interpret: bool | None = None) -> jax.Array:
+    return _rglru_scan_jit(a, x, h0, chunk=chunk,
+                           interpret=common.resolve_interpret(interpret))

@@ -1,0 +1,155 @@
+"""Composable init/apply device stages for the selection pipeline.
+
+The stax/NuX ``serial`` idiom applied to serving: a :class:`Stage` is a
+named ``init`` thunk; calling ``init()`` returns ``(state, apply)`` where
+
+* **state** is the stage's device-resident capture — corpus embeddings,
+  DSQE parameters, path tables — materialized as jax arrays exactly once,
+  at init time.  State is *threaded as an argument* into ``apply`` (never
+  closed over), so a composed program can donate or shard it and the same
+  ``apply`` can serve several table versions without retracing.
+* **apply(state, carry) -> carry** is pure and jittable: no host callbacks,
+  no Python side effects, no data-dependent shapes.  ``carry`` is a flat
+  ``dict`` pytree of batch-major arrays; a stage reads the keys it needs
+  and returns a NEW dict with its outputs added (inputs are never mutated
+  — donation-safe).  Because every stage obeys this contract,
+  ``jit(serial(...).apply)`` compiles the whole
+  ``embed -> retrieve -> score -> argmax`` chain into ONE device program
+  per shape bucket with no host hops between stages.
+
+Carry keys used by the selection stages (one query batch, row-aligned):
+
+  ``emb`` (B, d_in) raw embeddings -> [dsqe projection stage, core/dsqe.py]
+  -> ``z`` (B, d) unit-norm -> [:func:`retrieve_stage`] -> ``topk_vals`` /
+  ``topk_ids`` (B, k) -> [:func:`score_stage`, + ``slo`` (B, 2)] ->
+  ``scores`` (B, P) masked / ``set_id`` (B,) -> [:func:`decode_stage`] ->
+  ``best`` (B,) / ``feasible`` (B,).
+
+Padding/masking rules at stage boundaries (the ``kernels/common.py``
+contract): every batch row of the carry is either real or a pad row that
+the DRIVER (not the stages) appends and slices off; stages must be
+row-independent so pad rows cannot influence real rows.  Within a stage,
+zero-fill of padded table rows/lanes is legal only where a mask or slice
+removes them before any score comparison; anywhere a padded candidate
+could reach a top-k/argmax, the fill must be losing (``NEG_INF``).  The
+retrieve and score stages inherit this from the ops they wrap
+(``retrieval_topk`` masks padded corpus rows in-kernel; ``dsqe_score``
+pads SLO rows with ``-inf`` so a pad row admits nothing).
+
+On CPU/GPU each wrapped op dispatches its XLA ref, so the composed program
+is pure XLA; on TPU the retrieve stage lowers to the compiled Pallas
+streaming top-k and the score stage's dense vote scatter stays XLA (it is
+a handful of one-hot contractions — MXU-friendly as-is).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+from repro.kernels.dsqe_score.ref import dsqe_score_from_topk
+from repro.kernels.retrieval_topk.ops import retrieval_topk
+
+Carry = dict
+InitFn = Callable[[], tuple[Any, Callable[[Any, Carry], Carry]]]
+
+
+class Stage(NamedTuple):
+    """A named ``init() -> (state, apply)`` pair (see module docstring)."""
+    name: str
+    init: InitFn
+
+
+def serial(*stages: Stage) -> Stage:
+    """Compose stages left-to-right into one Stage.
+
+    ``init()`` runs every child init and returns the tuple of child states;
+    the composed ``apply`` threads the carry through the child applies in
+    order.  Composition is associative — ``serial`` of ``serial``s flattens
+    semantically — and the result is itself a Stage, so partial pipelines
+    compose further.
+    """
+    def init():
+        pairs = [s.init() for s in stages]
+        states = tuple(st for st, _ in pairs)
+        applies = tuple(ap for _, ap in pairs)
+
+        def apply(state, carry: Carry) -> Carry:
+            for ap, st in zip(applies, state):
+                carry = ap(st, carry)
+            return carry
+
+        return states, apply
+
+    return Stage("serial(" + ",".join(s.name for s in stages) + ")", init)
+
+
+def retrieve_stage(corpus, *, k: int, query_key: str = "z",
+                   out_vals: str = "topk_vals", out_ids: str = "topk_ids",
+                   interpret: bool | None = None) -> Stage:
+    """Top-k similarity search of ``carry[query_key]`` against ``corpus``.
+
+    State: the (n, d) corpus, device-resident float32.  Adds descending
+    ``out_vals``/``out_ids`` (B, k) to the carry; exact score ties admit the
+    lowest corpus id (the ``retrieval_topk`` contract).
+    """
+    k = min(k, corpus.shape[0])
+
+    def init():
+        state = jnp.asarray(corpus, jnp.float32)
+
+        def apply(corpus_dev, carry: Carry) -> Carry:
+            vals, ids = retrieval_topk(carry[query_key], corpus_dev, k=k,
+                                       interpret=interpret)
+            return {**carry, out_vals: vals, out_ids: ids}
+
+        return state, apply
+
+    return Stage(f"retrieve[k={k}]", init)
+
+
+def score_stage(protos, path_weights, contains, lat, cost, prior, valid, *,
+                query_key: str = "z", slo_key: str = "slo") -> Stage:
+    """Algorithm-3 path scoring from the retrieve stage's top-k.
+
+    State: the seven selection tables, device-resident float32.  Consumes
+    ``carry[query_key]`` (for the prototype argmax), ``topk_vals``/
+    ``topk_ids`` and the per-row (B, 2) ``carry[slo_key]``; adds masked
+    ``scores`` (B, P) and ``set_id`` (B,).  Infeasible entries are NEG_INF,
+    never 0 — a later argmax must see them lose.
+    """
+    def init():
+        state = tuple(jnp.asarray(t, jnp.float32) for t in (
+            protos, path_weights, contains, lat, cost, prior, valid))
+
+        def apply(tables, carry: Carry) -> Carry:
+            scores, set_id = dsqe_score_from_topk(
+                carry[query_key], carry["topk_vals"], carry["topk_ids"],
+                *tables, carry[slo_key])
+            return {**carry, "scores": scores, "set_id": set_id}
+
+        return state, apply
+
+    return Stage("score", init)
+
+
+def decode_stage(floor: float = NEG_INF / 2) -> Stage:
+    """Argmax decode: adds ``best`` (B,) int32 and ``feasible`` (B,) bool.
+
+    ``jnp.argmax`` picks the FIRST maximum, matching the host oracle's
+    ``np.argmax`` lowest-index tie-break; a row is feasible iff its best
+    masked score clears ``floor`` (above-the-mask sentinel threshold).
+    Stateless — the fallback for infeasible rows stays on the host.
+    """
+    def init():
+        def apply(_, carry: Carry) -> Carry:
+            scores = carry["scores"]
+            best = jnp.argmax(scores, axis=1).astype(jnp.int32)
+            top = jnp.take_along_axis(scores, best[:, None].astype(jnp.int32),
+                                      axis=1)[:, 0]
+            return {**carry, "best": best, "feasible": top > floor}
+
+        return None, apply
+
+    return Stage("decode", init)

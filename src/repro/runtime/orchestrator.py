@@ -9,7 +9,11 @@ micro-batching admission loop coalesces concurrent submissions — up to
 first — and dispatches each bucket as ONE fused
 ``RuntimePathSelector.select_batch`` pass plus ONE non-blocking
 ``ReplicaFleet.submit_many_async`` fan-out, so open-world traffic rides the
-amortized batch machinery by default instead of opt-in.
+amortized batch machinery by default instead of opt-in.  With the kernel
+engine the whole bucket is handed to the composed
+embed -> retrieve -> score -> argmax device program ONCE per admission
+bucket (one jit trace per shape bucket — ``stats()['fused_traces']``); only
+the rare OOD-fallback rows return to host Python.
 
 Backpressure is explicit: the admission queue is bounded (``max_queue``) and
 overflow is rejected immediately with a typed ``Overloaded`` result (load
@@ -589,6 +593,12 @@ class Orchestrator:
                 "shed": self.shed_count,
                 "deadline_shed": self.deadline_shed_count,
                 "batches": self.batches,
+                # (re)traces of the fused selection program: bounded by the
+                # distinct shape buckets seen, 0 for the numpy engine (or a
+                # serverless orchestrator, e.g. shed-path unit tests)
+                "fused_traces": getattr(
+                    getattr(self.server, "rps", None),
+                    "kernel_trace_count", 0),
                 "dispatched": self.dispatched,
                 "completed": self.completed,
                 "failed": self.failed,

@@ -227,5 +227,8 @@ class EcoLLMServer:
             "slo_cost_violation_rate": self.tracker.cost_violation_rate,
             "requests": self.tracker.total,
             "rps_engine": "kernel" if self.rps.use_kernel else "numpy",
+            # times the fused embed->retrieve->score->argmax program was
+            # (re)traced — bounded by distinct admission shape buckets
+            "fused_traces": self.rps.kernel_trace_count,
             "embed_cache": embed,
         }

@@ -93,7 +93,8 @@ def test_moe_gmm_kernel(E, C, D, F, dtype):
 
 @pytest.mark.parametrize("Bq,d,K,N,P,knn",
                          [(5, 64, 7, 50, 210, 16), (1, 128, 3, 20, 64, 8),
-                          (9, 512, 23, 105, 210, 16), (132, 32, 4, 30, 130, 4)])
+                          (9, 512, 23, 105, 210, 16), (132, 32, 4, 30, 130, 4),
+                          (9, 64, 5, 700, 130, 16)])  # N>512: streamed blocks
 def test_dsqe_score_kernel(Bq, d, K, N, P, knn):
     """Pallas kernel body (interpret) vs pure-jnp ref: hard top-k voting,
     argmax critical set, prior, validity mask, per-query SLO vectors."""
@@ -118,6 +119,132 @@ def test_dsqe_score_kernel(Bq, d, K, N, P, knn):
     np.testing.assert_allclose(np.where(live, s1, 0), np.where(live, s2, 0), atol=1e-5)
     assert bool(jnp.all((s1 < -1e29) == (s2 < -1e29)))
     assert bool(jnp.all(id1 == id2))
+
+
+# -- shared dispatch policy (kernels/common.py) ------------------------------
+
+
+def test_common_dispatch_policy(monkeypatch):
+    """The two dispatch predicates flip with the backend probe and always
+    honor an explicit interpret bool."""
+    from repro.kernels import common
+
+    monkeypatch.setattr(common, "is_tpu", lambda: False)
+    assert common.resolve_interpret(None) is True  # off-TPU: interpret
+    assert common.dispatch_pallas(None) is False  # off-TPU: XLA ref
+    monkeypatch.setattr(common, "is_tpu", lambda: True)
+    assert common.resolve_interpret(None) is False  # TPU: compiled Pallas
+    assert common.dispatch_pallas(None) is True
+    for probe in (False, True):
+        monkeypatch.setattr(common, "is_tpu", lambda p=probe: p)
+        assert common.resolve_interpret(True) is True  # explicit bool wins
+        assert common.resolve_interpret(False) is False
+        assert common.dispatch_pallas(True) is True
+        assert common.dispatch_pallas(False) is True  # forces the Pallas body
+
+
+def test_selection_ops_dispatch_ref_on_cpu_and_honor_interpret(monkeypatch):
+    """On a non-TPU backend the selection ops must compile their XLA ref and
+    never touch the Pallas kernel; interpret=True must force the kernel."""
+    import repro.kernels.dsqe_score.ops as dops
+    import repro.kernels.retrieval_topk.ops as rops
+
+    class _KernelTouched(Exception):
+        pass
+
+    def _trap(*a, **kw):
+        raise _KernelTouched
+
+    monkeypatch.setattr(rops, "retrieval_topk_kernel", _trap)
+    monkeypatch.setattr(dops, "dsqe_score_kernel", _trap)
+    assert jax.default_backend() != "tpu"  # conftest pins JAX_PLATFORMS=cpu
+
+    ks = jax.random.split(jax.random.key(0), 4)
+    q, corpus = jax.random.normal(ks[0], (3, 40)), jax.random.normal(ks[1], (11, 40))
+    vals, ids = rops.retrieval_topk(q, corpus, k=4)  # ref path: no kernel
+    rv, ri = jax.lax.top_k(q @ corpus.T, 4)
+    assert np.array_equal(np.asarray(ids), np.asarray(ri))
+    with pytest.raises(_KernelTouched):
+        rops.retrieval_topk(q, corpus, k=4, interpret=True)
+
+    args = (q, jax.random.normal(ks[2], (2, 40)), corpus,
+            jnp.abs(jax.random.normal(ks[3], (11, 6))),
+            jnp.ones((2, 6)), jnp.ones(6), jnp.ones(6), jnp.zeros(6),
+            jnp.ones(6), jnp.asarray([9.0, 9.0]))
+    s, _ = dops.dsqe_score(*args, knn=3)  # ref path: no kernel
+    assert s.shape == (3, 6)
+    with pytest.raises(_KernelTouched):
+        dops.dsqe_score(*args, knn=3, interpret=True)
+
+
+def test_layout_ops_route_interpret_through_common(monkeypatch):
+    """Every layout op resolves interpret=None via common.resolve_interpret
+    OUTSIDE its jit — so the backend policy is applied (and patchable) per
+    call, not baked into a stale trace."""
+    from repro.kernels import common
+
+    class _Routed(Exception):
+        pass
+
+    def _trap(interpret):
+        assert interpret is None
+        raise _Routed
+
+    monkeypatch.setattr(common, "resolve_interpret", _trap)
+    z4 = jnp.zeros((1, 8, 1, 128))
+    with pytest.raises(_Routed):
+        flash_attention(z4, z4, z4)
+    with pytest.raises(_Routed):
+        decode_attention(z4, z4, z4, jnp.int32(4))
+    with pytest.raises(_Routed):
+        moe_gmm(jnp.zeros((1, 8, 16)), jnp.zeros((1, 16, 8)))
+    with pytest.raises(_Routed):
+        rglru_scan_op(jnp.zeros((1, 8, 8)), jnp.zeros((1, 8, 8)),
+                      jnp.zeros((1, 8)))
+
+
+# -- padding-fill hazards at stage boundaries --------------------------------
+
+
+def test_retrieval_pad_rows_cannot_win_topk():
+    """Directed pad-fill hazard: every real similarity is negative, so the
+    zero-filled pad rows (13 -> 16 sublanes; 600 -> 1024 streamed rows)
+    would ALL outrank every real chunk if the kernel compared them unmasked.
+    The in-kernel ``iota < n_valid -> NEG_INF`` mask must keep them out."""
+    from repro.kernels.retrieval_topk.ops import retrieval_topk
+    from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
+
+    for n in (13, 600):  # single-block and multi-block streaming
+        rng = np.random.default_rng(n)
+        corpus = jnp.asarray(np.abs(rng.normal(size=(n, 64))), jnp.float32)
+        q = jnp.asarray(-np.abs(rng.normal(size=(5, 64))), jnp.float32)
+        vals, ids = retrieval_topk(q, corpus, k=6, interpret=True)
+        assert int(jnp.max(ids)) < n, "a padded corpus row won a top-k slot"
+        assert float(jnp.max(vals)) < 0.0
+        rvals, rids = retrieval_topk_ref(q, corpus, k=6)
+        assert np.array_equal(np.asarray(ids), np.asarray(rids))
+        np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals),
+                                   atol=1e-5)
+
+
+def test_dsqe_pad_prototypes_cannot_win_argmax():
+    """Directed pad-fill hazard: all real prototype similarities are
+    negative, so the zero-filled pad prototype rows (7 -> 8) would win the
+    critical-set argmax unmasked; k_valid must keep set_id < K."""
+    rng = np.random.default_rng(3)
+    K, P, N = 7, 130, 30
+    unit = lambda x: x / np.linalg.norm(x, axis=-1, keepdims=True)
+    q = jnp.asarray(unit(np.abs(rng.normal(size=(5, 128)))), jnp.float32)
+    protos = jnp.asarray(unit(-np.abs(rng.normal(size=(K, 128)))), jnp.float32)
+    train = jnp.asarray(unit(rng.normal(size=(N, 128))), jnp.float32)
+    pw = jnp.asarray(rng.uniform(size=(N, P)), jnp.float32)
+    args = (q, protos, train, pw, jnp.ones((K, P)), jnp.ones(P), jnp.ones(P),
+            jnp.zeros(P), jnp.ones(P), jnp.asarray([9.0, 9.0]))
+    s1, id1 = dsqe_score(*args, knn=4, interpret=True)
+    assert int(jnp.max(id1)) < K, "a padded prototype won the set argmax"
+    s2, id2 = dsqe_score_ref(*args, knn=4)
+    assert np.array_equal(np.asarray(id1), np.asarray(id2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
 
 
 def test_kernel_matches_model_attention():

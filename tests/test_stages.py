@@ -1,0 +1,134 @@
+"""Stage composition contract (`repro.kernels.stages`): serial == sequential
+bit-for-bit on the CPU refs, one jit trace per shape bucket for the composed
+program, and carry/state threading that survives donated buffers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dsqe import init_dsqe, projection_stage
+from repro.kernels.stages import (decode_stage, retrieve_stage, score_stage,
+                                  serial)
+
+D_IN, D, K, N, P, KNN = 48, 256, 5, 37, 29, 8
+
+
+def _tables(seed=0):
+    rng = np.random.default_rng(seed)
+    unit = lambda x: x / np.linalg.norm(x, axis=-1, keepdims=True)
+    protos = unit(rng.normal(size=(K, D))).astype(np.float32)
+    train = unit(rng.normal(size=(N, D))).astype(np.float32)
+    pathw = (rng.uniform(size=(N, P)) * (rng.uniform(size=(N, P)) < 0.2)
+             ).astype(np.float32)
+    contains = (rng.uniform(size=(K, P)) < 0.6).astype(np.float32)
+    lat = rng.uniform(0.1, 5.0, P).astype(np.float32)
+    cost = rng.uniform(0.0, 0.01, P).astype(np.float32)
+    prior = (rng.uniform(size=P) * 1e-3).astype(np.float32)
+    valid = (rng.uniform(size=P) < 0.9).astype(np.float32)
+    return protos, train, pathw, contains, lat, cost, prior, valid
+
+
+def _stages(seed=0):
+    protos, train, pathw, contains, lat, cost, prior, valid = _tables(seed)
+    params = jax.tree.map(np.asarray,
+                          init_dsqe(jax.random.key(seed), D_IN, K))
+    return [
+        projection_stage(params),
+        retrieve_stage(train, k=KNN, query_key="z"),
+        score_stage(protos, pathw, contains, lat, cost, prior, valid),
+        decode_stage(),
+    ]
+
+
+def _carry(B=8, seed=1):
+    rng = np.random.default_rng(seed)
+    return {
+        "emb": jnp.asarray(rng.normal(size=(B, D_IN)), jnp.float32),
+        "slo": jnp.asarray(
+            np.stack([rng.uniform(0.0, 6.0, B),
+                      rng.uniform(0.0, 0.012, B)], axis=1), jnp.float32),
+    }
+
+
+def _assert_carries_equal(a, b):
+    assert set(a) == set(b)
+    for key in a:
+        np.testing.assert_array_equal(
+            np.asarray(a[key]), np.asarray(b[key]), err_msg=key)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4])
+def test_serial_prefix_equals_sequential(n):
+    """serial of the first n stages == the same n applies run one at a time
+    with a host hop between them — bit-for-bit on the CPU refs."""
+    stages = _stages()[:n]
+    state, fused = serial(*stages).init()
+    got = jax.jit(fused)(state, _carry())
+
+    want = _carry()
+    for st, ap in (s.init() for s in stages):
+        want = jax.jit(ap)(st, want)
+        want = {k: jnp.asarray(np.asarray(v)) for k, v in want.items()}
+    _assert_carries_equal(got, want)
+
+
+def test_serial_is_associative():
+    """serial(serial(a, b), c, d) == serial(a, b, c, d) — partial pipelines
+    compose without changing results."""
+    a, b, c, d = _stages()
+    s1, f1 = serial(serial(a, b), c, d).init()
+    s2, f2 = serial(a, b, c, d).init()
+    _assert_carries_equal(jax.jit(f1)(s1, _carry()), jax.jit(f2)(s2, _carry()))
+
+
+def test_composed_trace_count_one_per_shape_bucket():
+    """The composed program traces once per carry shape, not per call — the
+    stage-level version of the `kernel_trace_count` pin from PR 4."""
+    state, fused = serial(*_stages()).init()
+    traces = []
+
+    @jax.jit
+    def counted(state, carry):
+        traces.append(1)
+        return fused(state, carry)
+
+    for seed in (1, 2, 3):
+        counted(state, _carry(B=8, seed=seed))
+    assert len(traces) == 1  # same bucket: one trace serves every batch
+    counted(state, _carry(B=16))
+    assert len(traces) == 2  # new shape bucket: exactly one more trace
+
+
+@pytest.mark.filterwarnings("ignore:Some donated buffers were not usable")
+def test_decisions_survive_donated_buffers():
+    """Donating the carry AND the threaded state must not change a single
+    bit: state is passed as an argument (never closed over), so a donated
+    copy is consumed while the original stays live for the next batch."""
+    stages = _stages()
+    state, fused = serial(*stages).init()
+    baseline = jax.jit(fused)(state, _carry())
+
+    donating = jax.jit(fused, donate_argnums=(0, 1))
+    state_copy = jax.tree.map(jnp.array, state)
+    donated = donating(state_copy, _carry())
+    _assert_carries_equal(donated, baseline)
+
+    # the ORIGINAL state was not donated: a second batch through the
+    # non-donating program still sees intact tables
+    again = jax.jit(fused)(state, _carry())
+    _assert_carries_equal(again, baseline)
+
+
+def test_fused_carry_contract():
+    """The composed selection pipeline adds exactly the documented keys and
+    decode agrees with a host argmax over the masked scores."""
+    state, fused = serial(*_stages()).init()
+    out = jax.jit(fused)(state, _carry())
+    assert set(out) == {"emb", "slo", "z", "topk_vals", "topk_ids",
+                       "scores", "set_id", "best", "feasible"}
+    scores = np.asarray(out["scores"])
+    np.testing.assert_array_equal(np.asarray(out["best"]),
+                                  np.argmax(scores, axis=1))
+    np.testing.assert_array_equal(
+        np.asarray(out["feasible"]),
+        scores[np.arange(scores.shape[0]), np.argmax(scores, axis=1)] > -5e29)

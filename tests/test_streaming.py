@@ -92,23 +92,34 @@ def _streaming_fleet(n_chunks=3, chunk_delay=0.0, log=None, **kw):
 def test_hedged_stream_delivers_chunks_exactly_once_in_order():
     """A straggling primary gets a hedge duplicate; whoever emits first owns
     the stream, every subscriber sees each chunk exactly once and in order,
-    and the loser is cancelled with exact counter accounting."""
-    log = []
-    fleet = _streaming_fleet(log=log)
-    # warm the backup's rolling wall-clock p95 so hedge deadlines are armed
-    fleet.replicas[0].straggle_rate = 0.0
-    for _ in range(24):
-        fleet.submit("warm")
-    fleet.replicas[0].straggle_rate = 1.0
+    and the loser is cancelled with exact counter accounting.
 
-    got = defaultdict(list)
-    futs = fleet.submit_many_async([f"j{i}" for i in range(6)], stream=True)
-    for i, fut in enumerate(futs):
-        fut.add_chunk_callback(lambda c, i=i: got[i].append(c))
-    outs = [fut.result(timeout=10.0) for fut in futs]
-    snap = _quiesce(fleet)
+    The work-stealing balancer may legitimately resolve the whole batch on
+    the fast replica before the straggler claims anything — then no flight
+    straggles and there is correctly nothing to hedge — so the scenario
+    retries until a straggling primary actually existed (a hedge fired)."""
+    for _ in range(10):
+        log = []
+        fleet = _streaming_fleet(log=log)
+        # warm the backup's rolling wall-clock p95 so hedge deadlines are
+        # armed
+        fleet.replicas[0].straggle_rate = 0.0
+        for _ in range(24):
+            fleet.submit("warm")
+        fleet.replicas[0].straggle_rate = 1.0
 
-    assert any(m["hedges"] for _, m in outs), "no hedge fired"
+        got = defaultdict(list)
+        futs = fleet.submit_many_async([f"j{i}" for i in range(6)],
+                                       stream=True)
+        for i, fut in enumerate(futs):
+            fut.add_chunk_callback(lambda c, i=i: got[i].append(c))
+        outs = [fut.result(timeout=10.0) for fut in futs]
+        snap = _quiesce(fleet)
+        if any(m["hedges"] for _, m in outs):
+            break
+        fleet.close()  # everything landed on the fast replica: re-roll
+    else:
+        raise AssertionError("no hedge fired in 10 attempts")
     for i, (out, meta) in enumerate(outs):
         assert out == ("full", f"j{i}")
         chunks = got[i]
