@@ -1,0 +1,385 @@
+"""Multi-tenant sharded serving: isolation, fairness, and shard scaling.
+
+Exercises the ``TenantRouter`` serving plane (``repro.runtime.router``) over
+a TWO-domain server — every selection pass runs the domain-sharded fused
+program (one jitted pass per admission bucket, domain id as a traced scalar
+carry key) — under three regimes:
+
+  * parity — the per-domain sharded program must agree decision-for-decision
+    with each domain's own staged pipeline AND its numpy selector (including
+    infeasible-SLO fallback rows), with jit traces bounded by the distinct
+    power-of-two shape buckets, never by domains or tenants.
+  * isolation — one attacker tenant offered 2x the serving capacity ON THE
+    VICTIM'S OWN SHARD (tenant names probed until the hash ring co-locates
+    them).  Replica service time is emulated with a real sleep so capacity
+    is deterministic (``n_replicas / SERVICE_S``) and the open-loop drive
+    stays within asyncio timer fidelity on a shared CI host.  The victim's
+    deadline-class Poisson trickle must keep its p99 within
+    ``VICTIM_P99_FACTOR`` of the same trickle on an unloaded router, while
+    the attacker's overflow is shed at its own queue/quota walls (never the
+    victim's).
+  * scaling — the same Zipf-distributed 8-tenant workload driven closed-loop
+    through 1, 2, and 4 admission shards over ONE shared fleet.  Aggregate
+    throughput must be monotone non-decreasing within ``SCALE_TOL`` (on
+    multi-core hosts sharding overlaps the per-bucket selection passes; on a
+    single-core host the gate degenerates to "sharding is free").
+
+Accounting is gated in every regime: per tenant, ``offered == admitted +
+shed`` and ``admitted == served + failed`` EXACTLY at quiescence — no
+request is lost or double-counted anywhere in the sharded plane.
+
+  PYTHONPATH=src python -m benchmarks.multitenant_serving [--smoke]
+"""
+from __future__ import annotations
+
+import asyncio
+import os
+import random
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.rps import bucket_batch
+from repro.core.slo import SLO
+from repro.launch.serve import build_multi_server, zipf_shares
+
+from benchmarks import reporting
+from repro.runtime.orchestrator import Overloaded
+from repro.runtime.router import TenantRouter, TenantSpec
+from repro.runtime.server import Request
+
+DOMAINS = ["smarthome", "techqa"]
+VICTIM_P99_FACTOR = 1.5   # victim p99 under attack vs unloaded
+ATTACK_OVERLOAD = 2.0     # attacker offered load vs measured capacity
+SCALE_TOL = 0.97          # per-step monotonicity tolerance (wall-clock noise)
+N_TENANTS = 8             # Zipf tenant population in the scaling phase
+
+
+@dataclass
+class Result:
+    n_domains: int
+    parity_rows: int
+    parity_ok: bool
+    fused_traces: int
+    distinct_buckets: int
+    # isolation phase
+    capacity_qps: float
+    victim_n: int
+    victim_p99_unloaded_ms: float
+    victim_p99_attacked_ms: float
+    victim_p99_ratio: float
+    victim_shed: int
+    attacker_offered: int
+    attacker_shed: int
+    attacker_shed_reasons: dict
+    # scaling phase
+    n_tenants: int
+    scale_requests: int
+    thpt_qps_by_shards: dict = field(default_factory=dict)
+    # accounting (all phases)
+    accounting_exact: bool = True
+
+
+def _accounting_exact(stats: dict) -> bool:
+    """offered == admitted + shed and admitted == served + failed, per
+    tenant, at quiescence."""
+    for t in stats["tenants"].values():
+        if t["offered"] != t["admitted"] + t["shed"]:
+            return False
+        if t["admitted"] != t["served"] + t["failed"]:
+            return False
+    return True
+
+
+def _check_parity(server, tests) -> tuple[int, bool]:
+    """Fused sharded program == staged sharded pipeline == each domain's own
+    numpy selector, across domains, feasible and infeasible rows."""
+    sh = server.sharded_selector()
+    rows, ok = 0, True
+
+    def keyed(d):
+        return (d.path.key, d.set_id, d.used_fallback)
+
+    for name, idx in tests.items():
+        dom, rps, _ = server.domain_entry(name)
+        canon = server.canonical_domain(name)
+        embs = dom.query_embeddings[idx]
+        for slos in ([SLO()] * len(idx),
+                     [SLO(max_latency_s=1e-9, max_cost_usd=1e-12)] * len(idx)):
+            base = rps.select_batch(embs, slos)
+            fused = sh.select_batch(embs, slos, canon)
+            staged = sh.select_batch_staged(embs, slos, canon)
+            rows += len(idx)
+            for b, f, s in zip(base, fused, staged):
+                if not (keyed(b) == keyed(f) == keyed(s)):
+                    ok = False
+    return rows, ok
+
+
+def _warm_buckets(server, tests, max_batch: int) -> set[int]:
+    """Trace every power-of-two bucket once (per-domain warmth is free: the
+    domain id is a traced scalar, not a static arg)."""
+    sh = server.sharded_selector()
+    name = next(iter(tests))
+    dom = server.domain_entry(name)[0]
+    canon = server.canonical_domain(name)
+    warm = dom.query_embeddings[tests[name]]
+    buckets = {bucket_batch(b) for b in range(1, max_batch + 1)}
+    for B in sorted(buckets):
+        embs = np.tile(warm, (B // len(warm) + 1, 1))[:B]
+        sh.select_batch(embs, [SLO()] * B, canon)
+    return buckets
+
+
+def _tenant_requests(tests, tenant_of, domain_of, n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        tenant = tenant_of(i, rng)
+        dom = domain_of(tenant)
+        qid = int(rng.choice(tests[dom]))
+        reqs.append(Request(prompt="", qid=qid, tenant=tenant, domain=dom))
+    return reqs
+
+
+async def _drive(router: TenantRouter, arrivals) -> dict:
+    """Open-loop drive: (request, arrival_s) pairs on one clock; returns the
+    per-ticket latency ledger keyed by tenant plus the router stats.
+
+    Latency is measured admitted -> completed (the ticket's own event
+    stamps), not from the *intended* arrival: on a busy single-core host
+    the asyncio driver itself slips submits by tens of milliseconds, and
+    that slip is driver infidelity, not serving-plane behaviour.  The
+    admitted-relative span still charges every server-side term — shard
+    queue wait, selection, fleet queue wait behind other tenants, and
+    service — which is exactly what the isolation gate is about."""
+    await router.start()
+    t0 = time.perf_counter()
+    tickets = []
+    for req, arr in arrivals:
+        delay = t0 + arr - time.perf_counter()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        tickets.append((req, arr, await router.submit(req)))
+    results = await asyncio.gather(*(t.wait() for _, _, t in tickets))
+    wall = time.perf_counter() - t0  # settle time; stop/drain not charged
+    await router.stop()
+    lats: dict[str, list[float]] = {}
+    shed: dict[str, int] = {}
+    for (req, arr, t), r in zip(tickets, results):
+        if isinstance(r, Overloaded):
+            shed[req.tenant] = shed.get(req.tenant, 0) + 1
+            continue
+        lats.setdefault(req.tenant, []).append(
+            t.event("completed") - t.event("admitted"))
+    return {"lats": lats, "shed": shed, "stats": router.stats(),
+            "wall_s": wall, "served": sum(len(v) for v in lats.values())}
+
+
+def _colliding_attacker(victim: str, n_shards: int) -> str:
+    """A tenant name the hash ring places on the victim's shard."""
+    from repro.runtime.router import HashRing
+    ring = HashRing(n_shards)
+    target = ring.lookup(victim)
+    for i in range(10_000):
+        name = f"attacker{i:04d}"
+        if ring.lookup(name) == target:
+            return name
+    raise RuntimeError("hash ring never collided (impossible)")
+
+
+def run(*, smoke: bool = False, seed: int = 0) -> Result:
+    n_queries = 24 if smoke else 60
+    budget = 2.0 if smoke else 3.0
+    max_batch = 8 if smoke else 32
+    server, tests = build_multi_server(DOMAINS, n_queries=n_queries,
+                                       budget=budget, seed=seed)
+    sh = server.sharded_selector()
+
+    # -- parity + trace bound (all modes) ------------------------------------
+    parity_rows, parity_ok = _check_parity(server, tests)
+    buckets = _warm_buckets(server, tests, max_batch)
+    batch_sizes: list[int] = []
+    orig = sh.select_batch
+
+    def recording(embs, slos, domain):
+        batch_sizes.append(len(embs))
+        return orig(embs, slos, domain)
+
+    sh.select_batch = recording
+    try:
+        # -- isolation: attacker at 2x capacity on the victim's shard --------
+        # Service-time emulation: every replica call real-sleeps SERVICE_S
+        # (the fleet's injected-straggle knob), so serving capacity is the
+        # deterministic n_replicas / SERVICE_S — measured capacity on a
+        # shared CI host is too noisy to anchor an overload ratio, and the
+        # emulated rate keeps the open-loop drive within asyncio's timer
+        # fidelity.  Hedging is off: with a 100% straggle rate every call
+        # would trip the rolling-p95 hedge and double the offered load.
+        victim = "victim"
+        attacker = _colliding_attacker(victim, n_shards=2)
+        vic_dom, atk_dom = DOMAINS[0], DOMAINS[1]
+        service_s = 0.006
+        capacity_qps = len(server.fleet.live()) / service_s
+        for rep in server.fleet.replicas.values():
+            rep.straggle_rate, rep.straggle_s = 1.0, service_s
+
+        # the attacker's quota is a sustainable slice of capacity — the wall
+        # a production deployment would set.  Offered 2x capacity, the
+        # excess sheds at the attacker's OWN quota/queue; what IS admitted
+        # stays well under fleet capacity, so the victim's jobs never drown
+        # behind attacker backlog on the shared replicas (admission has no
+        # fleet backpressure — quota is what bounds a tenant's in-flight
+        # footprint).
+        specs = [TenantSpec(victim, slo_class="deadline", weight=4.0,
+                            domain=vic_dom),
+                 TenantSpec(attacker, slo_class="standard", weight=1.0,
+                            rate_qps=capacity_qps * 0.10, burst=4.0,
+                            domain=atk_dom)]
+
+        def router():
+            return TenantRouter(server, specs, n_shards=2,
+                                max_batch=max_batch, max_wait_ms=10.0,
+                                max_queue=128, hedge=False)
+
+        try:
+            n_vic = 30 if smoke else 250
+            vic_rate = capacity_qps * 0.1
+            rng = random.Random(seed)
+            vic_arr = np.cumsum([rng.expovariate(vic_rate)
+                                 for _ in range(n_vic)])
+            vic_reqs = _tenant_requests(tests, lambda i, rng: victim,
+                                        lambda t: vic_dom, n_vic, seed + 1)
+
+            unloaded = asyncio.run(_drive(
+                router(), list(zip(vic_reqs, vic_arr))))
+
+            atk_rate = capacity_qps * ATTACK_OVERLOAD
+            n_atk = int(atk_rate * vic_arr[-1]) + 1
+            atk_arr = np.cumsum([rng.expovariate(atk_rate)
+                                 for _ in range(n_atk)])
+            atk_reqs = _tenant_requests(tests, lambda i, rng: attacker,
+                                        lambda t: atk_dom, n_atk, seed + 2)
+            mixed = sorted(
+                list(zip(vic_reqs, vic_arr)) + list(zip(atk_reqs, atk_arr)),
+                key=lambda p: p[1])
+            # fresh Requests: tickets/SLO stamps must not leak across runs
+            mixed = [(Request(prompt="", qid=r.qid, tenant=r.tenant,
+                              domain=r.domain), a) for r, a in mixed]
+            attacked = asyncio.run(_drive(router(), mixed))
+        finally:
+            for rep in server.fleet.replicas.values():
+                rep.straggle_rate, rep.straggle_s = 0.0, 0.5
+
+        p99 = lambda xs: float(np.percentile(xs, 99) * 1e3)  # noqa: E731
+        vic_p99_un = p99(unloaded["lats"][victim])
+        vic_p99_at = p99(attacked["lats"][victim])
+        atk_stats = attacked["stats"]["tenants"][attacker]
+        vic_stats = attacked["stats"]["tenants"][victim]
+        accounting = (_accounting_exact(unloaded["stats"])
+                      and _accounting_exact(attacked["stats"]))
+
+        # -- scaling: 8 Zipf tenants through 1 / 2 / 4 shards ----------------
+        shares = zipf_shares(N_TENANTS, 1.1)
+        names = [f"tenant{i:02d}" for i in range(N_TENANTS)]
+        doms = {n: DOMAINS[i % len(DOMAINS)] for i, n in enumerate(names)}
+        n_scale = 48 if smoke else 480
+        scale_reqs = _tenant_requests(
+            tests, lambda i, rng: names[int(rng.choice(N_TENANTS, p=shares))],
+            lambda t: doms[t], n_scale, seed + 3)
+        thpt: dict[int, float] = {1: 0.0, 2: 0.0, 4: 0.0}
+        # best-of-N damps wall-clock noise; trials are interleaved round-robin
+        # across shard counts so time-varying host load hits every config
+        # equally instead of always landing on whichever runs last.  A short
+        # coalescing window keeps the drain tail (per-shard partial buckets)
+        # from charging idle wait against throughput.
+        for trial in range(1 if smoke else 3):
+            for n_shards in thpt:
+                r = TenantRouter(
+                    server,
+                    [TenantSpec(n, domain=doms[n]) for n in names],
+                    n_shards=n_shards, max_batch=max_batch,
+                    max_wait_ms=0.5, max_queue=max(256, n_scale))
+                fresh = [(Request(prompt="", qid=q.qid, tenant=q.tenant,
+                                  domain=q.domain), 0.0) for q in scale_reqs]
+                out = asyncio.run(_drive(r, fresh))
+                accounting = accounting and _accounting_exact(out["stats"])
+                assert out["served"] == n_scale, "scaling drive shed traffic"
+                thpt[n_shards] = max(thpt[n_shards],
+                                     out["served"] / out["wall_s"])
+    finally:
+        sh.select_batch = orig
+
+    return Result(
+        n_domains=len(DOMAINS), parity_rows=parity_rows, parity_ok=parity_ok,
+        fused_traces=sh.kernel_trace_count,
+        distinct_buckets=len(buckets | {bucket_batch(b)
+                                        for b in batch_sizes}),
+        capacity_qps=capacity_qps, victim_n=n_vic,
+        victim_p99_unloaded_ms=vic_p99_un, victim_p99_attacked_ms=vic_p99_at,
+        victim_p99_ratio=vic_p99_at / max(vic_p99_un, 1e-9),
+        victim_shed=vic_stats["shed"],
+        attacker_offered=atk_stats["offered"], attacker_shed=atk_stats["shed"],
+        attacker_shed_reasons=dict(atk_stats["shed_reasons"]),
+        n_tenants=N_TENANTS, scale_requests=n_scale,
+        thpt_qps_by_shards=thpt, accounting_exact=accounting)
+
+
+def render(r: Result) -> str:
+    scaling = "  ".join(f"{k} shard{'s' if k > 1 else ' '} "
+                        f"{v:7.1f} q/s" for k, v in
+                        sorted(r.thpt_qps_by_shards.items()))
+    return "\n".join([
+        f"multi-tenant sharded serving over {r.n_domains} domains:",
+        f"  parity             {r.parity_rows} rows fused == staged == numpy:"
+        f" {r.parity_ok}",
+        f"  fused traces       {r.fused_traces} over {r.distinct_buckets} "
+        f"shape buckets ({r.n_domains} domains share every trace)",
+        f"  capacity           {r.capacity_qps:.1f} q/s (emulated service)",
+        f"  victim p99         {r.victim_p99_unloaded_ms:.1f} ms unloaded -> "
+        f"{r.victim_p99_attacked_ms:.1f} ms under {ATTACK_OVERLOAD:.0f}x "
+        f"same-shard attack ({r.victim_p99_ratio:.2f}x, gate "
+        f"{VICTIM_P99_FACTOR:.1f}x); victim shed {r.victim_shed}",
+        f"  attacker           offered {r.attacker_offered}, shed "
+        f"{r.attacker_shed} {r.attacker_shed_reasons}",
+        f"  scaling            {scaling}",
+        f"  accounting         per-tenant offered == admitted + shed, "
+        f"admitted == served + failed: {r.accounting_exact}",
+    ])
+
+
+def main(argv=None) -> None:
+    smoke = reporting.smoke_flag(argv)
+    r = run(smoke=smoke)
+    print(render(r))
+    # parity + accounting + trace-bound gates hold at any scale
+    assert r.parity_ok, "sharded fused selection diverged from the " \
+        "per-domain staged/numpy selectors"
+    assert r.accounting_exact, "per-tenant accounting drifted"
+    assert r.fused_traces <= r.distinct_buckets, \
+        f"{r.fused_traces} traces for {r.distinct_buckets} shape buckets — " \
+        "the domain-sharded program is retracing per domain or tenant"
+    assert r.victim_shed == 0, \
+        "the attacker's overload shed the victim's under-quota traffic"
+    if not smoke:
+        assert r.attacker_shed > 0, \
+            "2x overload never tripped the attacker's own shed walls"
+        assert r.victim_p99_ratio <= VICTIM_P99_FACTOR, \
+            f"victim p99 degraded {r.victim_p99_ratio:.2f}x under a " \
+            f"same-shard attack (gate {VICTIM_P99_FACTOR:.1f}x)"
+        # shard scaling comes from overlapping the per-bucket selection
+        # passes, which needs real parallel hardware; on a single-core host
+        # the gate degenerates to "sharding is (nearly) free" — 4 admission
+        # loops must not cost more than a fixed overhead allowance
+        tol = SCALE_TOL if (os.cpu_count() or 1) >= 2 else 0.75
+        thpt = r.thpt_qps_by_shards
+        assert thpt[2] >= thpt[1] * tol and \
+            thpt[4] >= thpt[2] * tol and thpt[4] >= thpt[1] * tol, \
+            f"aggregate throughput not monotone over shards (tol {tol}): " \
+            f"{thpt}"
+    reporting.emit("multitenant_serving", r, smoke=smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -149,6 +149,21 @@ def bench_serving() -> None:
          f"mean_bucket={r.mean_bucket:.1f};traces={r.kernel_traces}")
 
 
+def bench_multitenant() -> None:
+    from benchmarks import multitenant_serving as mt
+
+    t0 = time.time()
+    r = mt.run()
+    print("\n=== Multi-tenant: sharded admission over a shared fleet ===")
+    print(mt.render(r))
+    _csv("multitenant_serving", (time.time() - t0) * 1e6,
+         f"victim_p99_ratio={r.victim_p99_ratio:.2f}x;"
+         f"attacker_shed={r.attacker_shed};"
+         f"traces={r.fused_traces}/{r.distinct_buckets};"
+         f"parity={r.parity_ok};accounting={r.accounting_exact};"
+         f"thpt_4sh={r.thpt_qps_by_shards.get(4, 0.0):.0f}qps")
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline as rl
     from repro.perf.roofline import render
@@ -202,6 +217,7 @@ BENCHES = {
     "retrieval": bench_retrieval,
     "select": bench_select,
     "serving": bench_serving,
+    "multitenant": bench_multitenant,
     "fleet": bench_fleet,
     "kernels": bench_kernels,
     "table3": bench_table3,

@@ -454,6 +454,210 @@ class RuntimePathSelector:
         return path
 
 
+class DomainShardedSelector:
+    """Per-domain selection-table shards behind ONE fused device program.
+
+    A multi-tenant server composes several ``DomainData``s, each with its own
+    trained ``RuntimePathSelector``.  Building a fused program per domain
+    would retrace (and re-resident) the whole pipeline per tenant; instead
+    this selector stacks every domain's device state on a leading domain
+    axis — DSQE projection parameters (shapes agree across domains by
+    construction), projected train embeddings, prototypes, vote weights,
+    containment, SLO tables — padded to the fleet-wide maxima with validity
+    masks, and gathers the shard row with a SCALAR ``domain_id`` carry key
+    inside the jitted pass (``kernels/stages.py`` shard stages).  The id is
+    a traced argument, so switching domains re-runs the SAME compiled
+    program: ``kernel_trace_count`` stays bounded by batch shape buckets, no
+    re-trace per tenant/domain.
+
+    One admission bucket = one domain (the orchestrator groups bucket rows
+    by domain before selection), so the id is scalar, not per-row — a
+    per-row gather would materialize a (B, N, d) corpus intermediate.
+
+    Decision-level parity with each domain's own numpy oracle
+    (``RuntimePathSelector.select_batch``) holds by the same argument as the
+    single-domain fused engine (module docstring), because pad rows are
+    inert by construction: padded train rows are masked to ``NEG_INF``
+    before the top-k (vote weight ``max(NEG_INF, 0) = 0`` and an all-zero
+    ``path_weights`` row), padded prototypes are masked out of the
+    critical-set argmax (``proto_valid``), and the per-path tables are each
+    domain's own directed-rounded float32 rows.  The host epilogue
+    (fallback, Decision construction) delegates to the owning domain's
+    selector, so fallback memoization and path identity stay per-domain.
+    """
+
+    def __init__(self, selectors: "dict[str, RuntimePathSelector]"):
+        if not selectors:
+            raise ValueError("DomainShardedSelector needs >= 1 domain")
+        self.names = list(selectors)
+        self._sel = dict(selectors)
+        self.domain_ids = {n: i for i, n in enumerate(self.names)}
+        sels = [self._sel[n] for n in self.names]
+        first = sels[0]
+        P = len(first.table.paths)
+        for n, s in zip(self.names, sels):
+            if len(s.table.paths) != P:
+                raise ValueError(
+                    f"domain {n!r}: path space size {len(s.table.paths)} != {P}"
+                    " — sharded tables need one shared path space shape")
+            if s.knn != first.knn:
+                raise ValueError(f"domain {n!r}: knn {s.knn} != {first.knn}")
+            if s.train_emb_proj.shape[1] != first.train_emb_proj.shape[1]:
+                raise ValueError(f"domain {n!r}: projection width differs")
+        self.knn = first.knn
+        self.kernel_trace_count = 0
+        self._kernel_state = None
+        self._staged_state = None
+        import threading
+        self._build_lock = threading.Lock()
+
+    def selector(self, domain: str) -> RuntimePathSelector:
+        return self._sel[domain]
+
+    # -- stacked table construction -------------------------------------------
+
+    def _selection_stages(self):
+        """Domain-sharded mirror of ``RuntimePathSelector._selection_stages``:
+        same four-stage pipeline, every table stacked (D, ...) with pad
+        validity masks, the shard row gathered by the ``domain_id`` carry."""
+        from repro.kernels.common import NEG_INF
+        from repro.kernels.stages import (decode_stage, shard_projection_stage,
+                                          shard_retrieve_stage,
+                                          shard_score_stage)
+
+        self._kernel_floor = NEG_INF / 2
+        sels = [self._sel[n] for n in self.names]
+        D = len(sels)
+        P = len(sels[0].table.paths)
+        dp = sels[0].train_emb_proj.shape[1]
+        K_max = max(s._protos_unit.shape[0] for s in sels)
+        N_max = max(s.train_emb_proj.shape[0] for s in sels)
+
+        n_layers = len(sels[0].dsqe.params["layers"])
+        layers = [
+            {"w": np.stack([np.asarray(s.dsqe.params["layers"][i]["w"],
+                                       np.float32) for s in sels]),
+             "b": np.stack([np.asarray(s.dsqe.params["layers"][i]["b"],
+                                       np.float32) for s in sels])}
+            for i in range(n_layers)]
+
+        protos = np.zeros((D, K_max, dp), np.float32)
+        proto_valid = np.zeros((D, K_max), np.float32)
+        train = np.zeros((D, N_max, dp), np.float32)
+        train_valid = np.zeros((D, N_max), np.float32)
+        pathw = np.zeros((D, N_max, P), np.float32)
+        contains = np.zeros((D, K_max, P), np.float32)
+        lat = np.zeros((D, P), np.float32)
+        cost = np.zeros((D, P), np.float32)
+        prior = np.zeros((D, P), np.float32)
+        valid = np.zeros((D, P), np.float32)
+        for di, s in enumerate(sels):
+            K = s._protos_unit.shape[0]
+            N = s.train_emb_proj.shape[0]
+            protos[di, :K] = s._protos_unit
+            proto_valid[di, :K] = 1.0
+            train[di, :N] = s.train_emb_proj
+            train_valid[di, :N] = 1.0
+            pw = np.zeros((N, P), np.float32)
+            pw[np.arange(N), s.train_best_path] = np.nan_to_num(
+                s.train_best_acc)
+            pathw[di, :N] = pw
+            contains[di, :K] = s.path_contains_set
+            lat[di] = _f32_ceil(s.path_latency)
+            cost[di] = _f32_ceil(s.path_cost)
+            prior[di] = 1e-3 * s.path_mean_acc
+            valid[di] = s.path_evaluated
+        return [
+            shard_projection_stage(layers, in_key="emb", out_key="z"),
+            shard_retrieve_stage(train, train_valid,
+                                 k=min(self.knn, N_max), query_key="z"),
+            shard_score_stage(protos, proto_valid, pathw, contains, lat,
+                              cost, prior, valid, query_key="z",
+                              slo_key="slo"),
+            decode_stage(self._kernel_floor),
+        ]
+
+    def _ensure_kernel(self):
+        if self._kernel_state is not None:
+            return self._kernel_state
+        with self._build_lock:
+            if self._kernel_state is not None:
+                return self._kernel_state
+            import jax
+
+            from repro.kernels.stages import serial
+
+            state, fused_apply = serial(*self._selection_stages()).init()
+
+            def _pass(state, embs, slo, did):
+                self.kernel_trace_count += 1  # runs at trace time only
+                carry = fused_apply(
+                    state, {"emb": embs, "slo": slo, "domain_id": did})
+                return (carry["scores"], carry["set_id"], carry["best"],
+                        carry["feasible"])
+
+            self._kernel_state = (state, jax.jit(_pass))
+            return self._kernel_state
+
+    def _ensure_staged(self):
+        if self._staged_state is not None:
+            return self._staged_state
+        with self._build_lock:
+            if self._staged_state is None:
+                import jax
+
+                self._staged_state = [
+                    (st, jax.jit(ap))
+                    for st, ap in (s.init() for s in self._selection_stages())]
+        return self._staged_state
+
+    # -- selection ------------------------------------------------------------
+
+    def select_batch(self, query_embs: np.ndarray, slos,
+                     domain: str) -> list[Decision]:
+        """Fused selection for one domain's query batch (one admission
+        bucket).  Same bucket padding / trace discipline as the
+        single-domain engine; the domain id rides as a traced scalar."""
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        sel = self._sel[domain]
+        did = self.domain_ids[domain]
+        embs, slo_list, max_lat, max_cost = sel._batch_inputs(
+            query_embs, slos)
+        embs32, slo32, B = sel._pad_bucket(embs, max_lat, max_cost)
+        state, score_pass = self._ensure_kernel()
+        _, set_ids, best, feas = score_pass(
+            state, jnp.asarray(embs32), jnp.asarray(slo32),
+            jnp.asarray(did, jnp.int32))
+        return sel._decisions(slo_list,
+                              np.asarray(set_ids, np.int64)[:B],
+                              np.asarray(best, np.int64)[:B],
+                              np.asarray(feas)[:B], t0)
+
+    def select_batch_staged(self, query_embs: np.ndarray, slos,
+                            domain: str) -> list[Decision]:
+        """A/B baseline: same shard stages, host round-trip per boundary."""
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        sel = self._sel[domain]
+        did = self.domain_ids[domain]
+        embs, slo_list, max_lat, max_cost = sel._batch_inputs(
+            query_embs, slos)
+        embs32, slo32, B = sel._pad_bucket(embs, max_lat, max_cost)
+        carry = {"emb": jnp.asarray(embs32), "slo": jnp.asarray(slo32),
+                 "domain_id": jnp.asarray(did, jnp.int32)}
+        for state, apply in self._ensure_staged():
+            carry = apply(state, carry)
+            carry = {key: jnp.asarray(np.asarray(v))
+                     for key, v in carry.items()}
+        return sel._decisions(slo_list,
+                              np.asarray(carry["set_id"], np.int64)[:B],
+                              np.asarray(carry["best"], np.int64)[:B],
+                              np.asarray(carry["feasible"])[:B], t0)
+
+
 def build_static_policy(table: EvalTable, lam: int, tol: float = 0.02) -> int:
     """Ablation Config 1 (paper §5.4): single best-average path — filter to
     within ``tol`` of best mean accuracy, then min cost/latency."""

@@ -35,13 +35,21 @@ __all__ = ["NEG_INF", "dsqe_score_from_topk", "dsqe_score_ref"]
 
 
 def dsqe_score_from_topk(z, topk_vals, topk_ids, protos, path_weights,
-                         contains, lat, cost, prior, valid, slo):
+                         contains, lat, cost, prior, valid, slo, *,
+                         proto_valid=None):
     """Masked path scores + critical-set ids from precomputed kNN top-k.
 
     ``z`` (Bq, d) projected queries; ``topk_vals``/``topk_ids`` (Bq, k) the
     train-similarity top-k (descending, lowest-index ties first); remaining
     tables as in ``dsqe_score_ref``.  ``slo`` must already be (Bq, 2)
     float32.  Returns (scores (Bq, P), set_id (Bq,) int32).
+
+    ``proto_valid`` (K,), optional: per-prototype validity mask for
+    domain-sharded tables padded to a common K — pad rows are zero vectors
+    whose similarity (0) would beat every REAL prototype when all real
+    similarities are negative, so masked rows are forced to ``NEG_INF``
+    before the argmax.  ``None`` (the single-domain path) is bit-for-bit the
+    pre-mask computation.
     """
     Bq = z.shape[0]
     N = path_weights.shape[0]
@@ -51,6 +59,8 @@ def dsqe_score_from_topk(z, topk_vals, topk_ids, protos, path_weights,
     valid = valid.reshape(1, -1)
 
     psims = z @ protos.T  # (Bq, K)
+    if proto_valid is not None:
+        psims = jnp.where(proto_valid.reshape(1, -1) > 0.5, psims, NEG_INF)
     set_id = jnp.argmax(psims, axis=1)  # first max wins on exact ties
     set_onehot = jax.nn.one_hot(set_id, protos.shape[0], dtype=jnp.float32)
 

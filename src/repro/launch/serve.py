@@ -20,6 +20,12 @@ latency / cost / SLO attainment.  Serving modes:
 ``--split`` extends the path space with CE-CoLLM split-inference choices
 (edge drafts chunks behind a confidence gate, cloud verifies low-confidence
 spans) so the selector can route draft/verify paths per query/SLO.
+
+Multi-tenant mode (``--tenants N``, requires ``--async``): N tenants with a
+Zipf(``--zipf``) popularity profile submit through the sharded
+``TenantRouter`` (``--shards`` admission shards, ``--slo-class`` service
+tier) instead of the bare orchestrator, and the summary breaks served/shed
+out per tenant.
 """
 from __future__ import annotations
 
@@ -38,6 +44,7 @@ from repro.core.paths import PathSpace, with_split_models
 from repro.core.rps import RuntimePathSelector
 from repro.core.slo import SLO
 from repro.runtime.orchestrator import Overloaded
+from repro.runtime.router import TenantRouter, TenantSpec
 from repro.runtime.server import EcoLLMServer, Request
 
 
@@ -56,6 +63,54 @@ def build_server(domain_name: str, *, n_queries: int = 120, budget: float = 5.0,
                               use_kernel=use_kernel)
     server = EcoLLMServer(dom, rps, emu.exec, n_replicas=n_replicas, seed=seed)
     return server, test_idx
+
+
+def _build_domain_shard(domain_name: str, *, n_queries: int, budget: float,
+                        lam: int, seed: int, split: bool = False):
+    """One domain's (DomainData, selector, executor, test_idx) — the
+    adaptation pipeline of ``build_server`` without the server."""
+    dom = build_domain(domain_name, n_queries=n_queries, seed=seed)
+    space = PathSpace(spec=with_split_models() if split else None)
+    train_idx, test_idx = train_test_split(dom, 0.3)
+    emu = Emulator(dom, space, seed=seed)
+    table = emu.explore(train_idx, budget=budget, lam=lam)
+    cca = critical_component_analysis(table, lam=lam)
+    emb_train = dom.query_embeddings[train_idx]
+    dsqe = train_dsqe(emb_train, cca.set_ids, len(cca.set_vocab), seed=seed)
+    rps = RuntimePathSelector(space, dsqe, cca, table, emb_train, lam=lam)
+    return dom, rps, emu.exec, test_idx
+
+
+def build_multi_server(domain_names: list[str], *, n_queries: int = 120,
+                       budget: float = 5.0, lam: int = 0, seed: int = 0,
+                       n_replicas: int = 2, split: bool = False):
+    """A multi-domain ``EcoLLMServer``: the first domain seeds the server
+    (it is the ``default`` shard), the rest join via ``add_domain`` and are
+    addressable by name (``Request.domain`` / ``TenantSpec.domain``).
+    Returns (server, {domain_name: test_idx}) — the first domain under BOTH
+    its own name and ``None``-maps-to-default semantics."""
+    if not domain_names:
+        raise ValueError("need >= 1 domain")
+    test_by_domain: dict[str, np.ndarray] = {}
+    dom, rps, execu, test_idx = _build_domain_shard(
+        domain_names[0], n_queries=n_queries, budget=budget, lam=lam,
+        seed=seed, split=split)
+    server = EcoLLMServer(dom, rps, execu, n_replicas=n_replicas, seed=seed)
+    server.alias_default_domain(domain_names[0])
+    test_by_domain[domain_names[0]] = test_idx
+    for i, name in enumerate(domain_names[1:], start=1):
+        dom, rps, execu, test_idx = _build_domain_shard(
+            name, n_queries=n_queries, budget=budget, lam=lam,
+            seed=seed + i, split=split)
+        server.add_domain(name, dom, rps, execu)
+        test_by_domain[name] = test_idx
+    return server, test_by_domain
+
+
+def zipf_shares(n: int, alpha: float = 1.1) -> np.ndarray:
+    """Zipf popularity profile: share of tenant at rank i ∝ 1/(i+1)^alpha."""
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** alpha
+    return w / w.sum()
 
 
 async def drive_async(server: EcoLLMServer, reqs: list[Request], *,
@@ -86,6 +141,31 @@ async def drive_async(server: EcoLLMServer, reqs: list[Request], *,
     stats["ttfc_mean_s"] = float(np.mean(ttfc)) if ttfc else float("nan")
     stats["streamed"] = len(ttfc)
     return served, len(results) - len(served), stats
+
+
+async def drive_router_async(server: EcoLLMServer, reqs: list[Request],
+                             tenants: list[TenantSpec], *, n_shards: int = 2,
+                             max_batch: int = 32, max_wait_ms: float = 2.0,
+                             max_queue: int = 256, rate_qps: float = 0.0,
+                             seed: int = 0):
+    """Multi-tenant open-loop driver: every request (pre-stamped with its
+    tenant) goes through the ``TenantRouter`` front door — consistent-hash
+    shard placement, SLO-class defaults, quota, and DRR fairness — instead
+    of a bare orchestrator.  Returns (responses, shed, router stats)."""
+    router = TenantRouter(server, tenants, n_shards=n_shards,
+                          max_batch=max_batch, max_wait_ms=max_wait_ms,
+                          max_queue=max_queue)
+    await router.start()
+    rng = random.Random(seed)
+    tickets = []
+    for req in reqs:
+        if rate_qps > 0:
+            await asyncio.sleep(rng.expovariate(rate_qps))
+        tickets.append(await router.submit(req))
+    results = await asyncio.gather(*(t.wait() for t in tickets))
+    await router.stop()
+    served = [r for r in results if not isinstance(r, Overloaded)]
+    return served, len(results) - len(served), router.stats()
 
 
 async def repl(server: EcoLLMServer, slo: SLO) -> None:
@@ -146,7 +226,20 @@ def main() -> None:
                          "back-to-back)")
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="multi-tenant mode (requires --async): N tenants "
+                         "with Zipf traffic shares routed through the "
+                         "sharded TenantRouter")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="admission shards for --tenants")
+    ap.add_argument("--slo-class", default="standard",
+                    choices=("deadline", "standard", "batch"),
+                    help="service tier for the generated tenants")
+    ap.add_argument("--zipf", type=float, default=1.1,
+                    help="Zipf exponent for the tenant popularity profile")
     args = ap.parse_args()
+    if args.tenants and not args.use_async:
+        ap.error("--tenants requires --async")
 
     server, test_idx = build_server(args.domain, n_queries=args.queries,
                                     budget=args.budget, lam=int(args.latency_first),
@@ -157,7 +250,25 @@ def main() -> None:
         return
     reqs = [Request(prompt="", qid=qid, slo=slo) for qid in test_idx]
     shed = 0
-    if args.use_async:
+    if args.tenants:
+        # Zipf traffic: tenant at popularity rank i sends share_i of the
+        # held-out queries, all through the sharded router front door
+        shares = zipf_shares(args.tenants, args.zipf)
+        tenants = [TenantSpec(f"tenant{i:02d}", slo_class=args.slo_class)
+                   for i in range(args.tenants)]
+        rng = np.random.default_rng(0)
+        for req in reqs:
+            req.tenant = tenants[int(rng.choice(args.tenants, p=shares))].name
+        responses, shed, rstats = asyncio.run(drive_router_async(
+            server, reqs, tenants, n_shards=args.shards,
+            max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+            max_queue=max(256, len(reqs)), rate_qps=args.rate))
+        print(f"router: {args.shards} shards, {args.tenants} tenants "
+              f"(zipf {args.zipf}), shed {shed}")
+        for name, t in sorted(rstats["tenants"].items()):
+            print(f"  {name}: offered {t['offered']} served {t['served']} "
+                  f"shed {t['shed']} (shard {t['shard']})")
+    elif args.use_async:
         responses, shed, stats = asyncio.run(drive_async(
             server, reqs, max_batch=args.max_batch,
             max_wait_ms=args.max_wait_ms, rate_qps=args.rate))

@@ -75,12 +75,24 @@ class ReplicaStats:
         default_factory=lambda: deque(maxlen=LAT_WINDOW))
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
+    # memoized p95 views, keyed by the record generation: the hedge monitor
+    # reads p95_wall on every tick for every candidate replica, and re-sorting
+    # the 512-entry window each time put an O(n log n) sort on the hot
+    # dispatch path.  `_gen` bumps on every record_success (the only writer
+    # of the windows), so a cache entry (gen, value) is valid exactly until
+    # the next sample lands.
+    _gen: int = field(default=0, repr=False, compare=False)
+    _p95_lat_memo: Optional[tuple] = field(default=None, repr=False,
+                                           compare=False)
+    _p95_wall_memo: Optional[tuple] = field(default=None, repr=False,
+                                            compare=False)
 
     def record_success(self, lat: float, wall: float) -> None:
         with self._lock:
             self.calls += 1
             self.latencies.append(lat)
             self.wall_latencies.append(wall)
+            self._gen += 1  # invalidates both p95 memos
 
     def record_failure(self) -> None:
         with self._lock:
@@ -97,15 +109,26 @@ class ReplicaStats:
         xs = sorted(xs[-256:])
         return xs[int(0.95 * (len(xs) - 1))]
 
-    def p95(self, default: float = 0.5) -> float:
+    def _p95_memoized(self, window: deque, memo_attr: str,
+                      default: float) -> float:
         with self._lock:
-            xs = list(self.latencies)
-        return self._p95(xs, default)
+            if len(window) < 8:
+                # below the warmup floor the caller's per-call default is the
+                # answer — never cached (defaults vary between call sites)
+                return default
+            memo = getattr(self, memo_attr)
+            if memo is not None and memo[0] == self._gen:
+                return memo[1]
+            val = self._p95(list(window), default)
+            setattr(self, memo_attr, (self._gen, val))
+            return val
+
+    def p95(self, default: float = 0.5) -> float:
+        return self._p95_memoized(self.latencies, "_p95_lat_memo", default)
 
     def p95_wall(self, default: float = 0.5) -> float:
-        with self._lock:
-            xs = list(self.wall_latencies)
-        return self._p95(xs, default)
+        return self._p95_memoized(self.wall_latencies, "_p95_wall_memo",
+                                  default)
 
 
 @dataclass
@@ -281,6 +304,10 @@ class ReplicaFleet:
         self.failover_count = 0
         self.requeue_count = 0
         self.cancelled_count = 0
+        # per-shard (or any caller-chosen tag) dispatch accounting: admission
+        # shards pass ``tag="shard<i>"`` so one shared fleet can attribute
+        # load to the shard that fanned it out; folded into ``snapshot()``
+        self.dispatched_by_tag: dict[str, int] = {}
 
         # `replicas` is the full registry and retains evicted members for
         # introspection (their stats windows are bounded); the hot paths
@@ -351,6 +378,7 @@ class ReplicaFleet:
                 "cancelled": self.cancelled_count,
                 "queue_depth": sum(len(q) for q in self._queues.values()),
                 "in_flight": sum(len(s) for s in self._active_by_rid.values()),
+                "dispatched_by_tag": dict(self.dispatched_by_tag),
             }
 
     def close(self) -> None:
@@ -435,17 +463,27 @@ class ReplicaFleet:
             return self._submit_sequential(request, hedge)
         return self._run_flights([_Flight(request, hedge)], hedge)[0]
 
-    def submit_many(self, requests, hedge: bool = True):
+    def submit_many(self, requests, hedge: bool = True,
+                    tag: Optional[str] = None):
         """Dispatch a batch concurrently across the fleet; results keep the
         input order.  ``max_workers=1`` falls back to the deterministic
-        sequential loop."""
+        sequential loop.  ``tag`` attributes the dispatch to a caller-chosen
+        bucket (admission shards use ``shard<i>``) in ``snapshot()``."""
         requests = list(requests)
+        self._count_tag(tag, len(requests))
         if self._pool is None:
             return [self._submit_sequential(r, hedge) for r in requests]
         return self._run_flights([_Flight(r, hedge) for r in requests], hedge)
 
+    def _count_tag(self, tag: Optional[str], n: int) -> None:
+        if tag is None or n <= 0:
+            return
+        with self._lock:
+            self.dispatched_by_tag[tag] = self.dispatched_by_tag.get(tag, 0) + n
+
     def submit_many_async(self, requests, hedge: bool = True,
-                          stream: bool = False) -> list[FleetFuture]:
+                          stream: bool = False,
+                          tag: Optional[str] = None) -> list[FleetFuture]:
         """Non-blocking fan-out: enqueue the batch and return a
         ``FleetFuture`` per request without waiting for any of them.
 
@@ -462,6 +500,7 @@ class ReplicaFleet:
         draw order and accounting as ``submit_many`` (chunks, if streamed,
         are buffered for replay)."""
         requests = list(requests)
+        self._count_tag(tag, len(requests))
         if self._pool is None:
             if not self.live():  # match the threaded branch: fail at submit
                 raise RuntimeError("no live replicas")

@@ -188,7 +188,8 @@ class Orchestrator:
 
     def __init__(self, server: "EcoLLMServer", *, max_batch: int = 32,
                  max_wait_ms: float = 2.0, max_queue: int = 256,
-                 hedge: bool = True, stream: bool = True):
+                 hedge: bool = True, stream: bool = True,
+                 shard_id: Optional[int] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.server = server
@@ -197,6 +198,10 @@ class Orchestrator:
         self.max_queue = max_queue
         self.hedge = hedge
         self.stream = stream  # thread chunk delivery through to tickets
+        # multi-tenant serving plane: an orchestrator can be one admission
+        # shard of a TenantRouter (runtime/router.py); the id tags its fleet
+        # dispatches so the ONE shared fleet attributes load per shard
+        self.shard_id = shard_id
         # heap entries: (-priority, seq, ticket) — seq breaks ties FIFO and
         # keeps ticket objects out of the comparison
         self._queue: asyncio.PriorityQueue = asyncio.PriorityQueue(
@@ -377,6 +382,7 @@ class Orchestrator:
         ticket.mark("failed")
         with self._stats_lock:
             self.failed += 1
+            self._note_settled(ticket, None, err)
         if not ticket._future.done():
             ticket._future.set_exception(err)
         ticket._end_stream()
@@ -387,10 +393,21 @@ class Orchestrator:
             self.shed_count += 1
             if reason == "deadline":
                 self.deadline_shed_count += 1
+            self._note_shed(ticket, reason)
         if not ticket._future.done():
             ticket._future.set_result(
                 Overloaded(reason, self._queue_depth(), self.max_queue))
         ticket._end_stream()
+
+    # -- per-tenant accounting hooks (no-ops here; AdmissionShard overrides).
+    # Both run UNDER self._stats_lock so shard counters stay consistent with
+    # the aggregate ones they refine.
+
+    def _note_shed(self, ticket: Ticket, reason: str) -> None:
+        pass
+
+    def _note_settled(self, ticket: Ticket, resp, err) -> None:
+        pass
 
     def _purge_lapsed(self) -> int:
         """Shed queued tickets whose admission deadline already lapsed, so
@@ -465,14 +482,39 @@ class Orchestrator:
 
     def _select(self, reqs: list["Request"]):
         """One fused selection pass for a bucket: resolve -> ``select_batch``
-        -> (query, path) jobs.  Shared by the async admission loop and the
-        synchronous shim path, so both produce identical decisions."""
+        -> (query, path, domain) jobs.  Shared by the async admission loop
+        and the synchronous shim path, so both produce identical decisions.
+
+        Single-domain servers take EXACTLY the pre-multi-tenant path (same
+        selector, same call); on a multi-domain server the bucket's rows are
+        grouped by domain and each group runs through the domain-sharded
+        fused program — one traced pass per group with the domain id as a
+        carried scalar, no re-trace per tenant/domain."""
         srv = self.server
         resolved = [srv._resolve_query(r) for r in reqs]
-        embs = np.stack([emb for _, emb in resolved])
-        decisions = srv.rps.select_batch(embs, [r.slo for r in reqs])
-        jobs = [(query, d.path) for (query, _), d in zip(resolved, decisions)]
+        if not srv.is_multi_domain():
+            embs = np.stack([emb for _, emb in resolved])
+            decisions = srv.rps.select_batch(embs, [r.slo for r in reqs])
+        else:
+            sharded = srv.sharded_selector()
+            groups: dict[str, list[int]] = {}
+            for i, r in enumerate(reqs):
+                groups.setdefault(srv.canonical_domain(r.domain), []).append(i)
+            decisions = [None] * len(reqs)
+            for dom, idxs in groups.items():
+                embs = np.stack([resolved[i][1] for i in idxs])
+                ds = sharded.select_batch(
+                    embs, [reqs[i].slo for i in idxs], dom)
+                for i, d in zip(idxs, ds):
+                    decisions[i] = d
+        jobs = [(query, d.path, r.domain or srv.DEFAULT_DOMAIN)
+                for (query, _), d, r in zip(resolved, decisions, reqs)]
         return resolved, decisions, jobs
+
+    def _fleet_tag(self) -> Optional[str]:
+        """Fleet dispatch-attribution tag: ``shard<i>`` when this
+        orchestrator is an admission shard, None (untagged) otherwise."""
+        return None if self.shard_id is None else f"shard{self.shard_id}"
 
     async def _dispatch(self, tickets: list[Ticket]) -> None:
         """Dispatch one bucket without blocking the event loop: selection is
@@ -487,7 +529,8 @@ class Orchestrator:
         for t in tickets:
             t.mark("selected")
         futures = self.server.fleet.submit_many_async(jobs, hedge=self.hedge,
-                                                      stream=self.stream)
+                                                      stream=self.stream,
+                                                      tag=self._fleet_tag())
         for t in tickets:
             t.mark("dispatched")
         for t, (query, _), dec, fut in zip(tickets, resolved, decisions,
@@ -534,6 +577,7 @@ class Orchestrator:
                         self.completed += 1
                     else:
                         self.failed += 1
+                    self._note_settled(ticket, resp, err)
 
             def settle():
                 record()
@@ -572,7 +616,8 @@ class Orchestrator:
             self.dispatched += len(reqs)
         try:
             resolved, decisions, jobs = self._select(reqs)
-            outcomes = self.server.fleet.submit_many(jobs, hedge=self.hedge)
+            outcomes = self.server.fleet.submit_many(jobs, hedge=self.hedge,
+                                                     tag=self._fleet_tag())
         except Exception:
             with self._stats_lock:  # keep completed + failed == dispatched
                 self.failed += len(reqs)
@@ -605,4 +650,5 @@ class Orchestrator:
                 "queue_depth": self._queue_depth(),
                 "max_batch": self.max_batch,
                 "max_queue": self.max_queue,
+                "shard_id": self.shard_id,
             }

@@ -31,12 +31,26 @@ from repro.runtime.fleet import Replica, ReplicaFleet
 from repro.runtime.orchestrator import Orchestrator
 
 
+#: tenant id used when a caller never names one — the single-tenant
+#: compatibility path; requests carrying it traverse exactly the
+#: pre-multi-tenant code.
+DEFAULT_TENANT = "default"
+
+
 @dataclass
 class Request:
     prompt: str
     slo: SLO = field(default_factory=SLO)
     build_id: str = "default"
     qid: Optional[int] = None  # known query id (benchmark mode)
+    # -- multi-tenant identity (PR 8); defaults preserve the single-tenant
+    # path bit-for-bit.  ``tenant`` names the quota/fairness principal;
+    # ``slo_class`` the named service class (resolved by the TenantRouter —
+    # None means "use the tenant's configured class"); ``domain`` the
+    # DomainData shard serving this request (None -> the server's default).
+    tenant: str = DEFAULT_TENANT
+    slo_class: Optional[str] = None
+    domain: Optional[str] = None
 
 
 @dataclass
@@ -61,12 +75,20 @@ class Response:
     slo_ok: bool
     replica: int
     meta: dict = field(default_factory=dict)
+    tenant: str = DEFAULT_TENANT
 
 
 class EcoLLMServer:
-    """Binds a trained RPS to a domain executor behind an elastic fleet."""
+    """Binds trained RPS instances to domain executors behind one elastic
+    fleet.  Constructed single-domain (``self.domain``/``self.rps``/
+    ``self.executor`` keep their pre-multi-tenant meaning: the DEFAULT
+    domain); ``add_domain`` composes further ``DomainData``s, after which
+    selection for mixed traffic runs through the domain-sharded fused
+    program (``sharded_selector``) while a single-domain server still
+    traverses exactly the original path."""
 
     EMBED_CACHE_MAX = 1024
+    DEFAULT_DOMAIN = "default"
 
     def __init__(self, domain: DomainData, rps: RuntimePathSelector,
                  executor: PipelineExecutor, n_replicas: int = 2, seed: int = 0,
@@ -75,6 +97,18 @@ class EcoLLMServer:
         self.rps = rps
         self.executor = executor
         self.tracker = SLOTracker()
+        # domain shards: name -> (DomainData, selector, executor).  The
+        # default entry aliases the attributes above.
+        self._domains: "OrderedDict[str, tuple]" = OrderedDict(
+            [(self.DEFAULT_DOMAIN, (domain, rps, executor))])
+        self._domain_aliases: dict[str, str] = {}
+        self._sharded = None  # DomainShardedSelector, built on demand
+        self._domains_lock = threading.Lock()
+        # per-tenant SLO trackers (non-default tenants only, so the
+        # single-tenant hot path never touches this dict) + the router that
+        # fronts this server, if any — both folded into system_state()
+        self._tenant_trackers: dict[str, SLOTracker] = {}
+        self._router = None
         # LRU memo for open-world prompt embeddings (same pattern as the
         # executor's retrieval memoization); guarded for concurrent handles
         self._embed_lock = threading.Lock()
@@ -108,26 +142,83 @@ class EcoLLMServer:
                 self._orchestrator.reconfigure(**kwargs)
             return self._orchestrator
 
+    # -- domain composition ---------------------------------------------------
+
+    def add_domain(self, name: str, domain: DomainData,
+                   rps: RuntimePathSelector,
+                   executor: PipelineExecutor) -> None:
+        """Compose another domain shard into this server.  Selection tables
+        join the domain-sharded fused program (built lazily on next use);
+        the domain's executor serves jobs routed to it by name."""
+        if name == self.DEFAULT_DOMAIN:
+            raise ValueError(f"{name!r} is reserved for the seed domain")
+        with self._domains_lock:
+            if name in self._domains:
+                raise ValueError(f"domain {name!r} already registered")
+            self._domains[name] = (domain, rps, executor)
+            self._sharded = None  # force rebuild with the new shard
+
+    def alias_default_domain(self, name: str) -> None:
+        """Let the seed domain (registered as ``default``) also answer to
+        its real name, so multi-domain callers can address every shard
+        uniformly by domain name."""
+        with self._domains_lock:
+            if name in self._domains:
+                raise ValueError(f"domain {name!r} already registered")
+            self._domain_aliases[name] = self.DEFAULT_DOMAIN
+
+    def canonical_domain(self, name: Optional[str]) -> str:
+        """Registered shard key for a request's domain field."""
+        if name is None:
+            return self.DEFAULT_DOMAIN
+        return self._domain_aliases.get(name, name)
+
+    def domain_names(self) -> list[str]:
+        with self._domains_lock:
+            return list(self._domains)
+
+    def is_multi_domain(self) -> bool:
+        return len(self._domains) > 1
+
+    def domain_entry(self, name: Optional[str]):
+        """(DomainData, selector, executor) for ``name`` (None -> default)."""
+        return self._domains[self.canonical_domain(name)]
+
+    def sharded_selector(self):
+        """The domain-sharded fused selector over every registered domain
+        (``core.rps.DomainShardedSelector``), built once per composition."""
+        from repro.core.rps import DomainShardedSelector
+        with self._domains_lock:
+            if self._sharded is None:
+                self._sharded = DomainShardedSelector(
+                    {n: sel for n, (_, sel, _) in self._domains.items()})
+            return self._sharded
+
     def _execute(self, job):
-        query, path = job
-        return self.executor.run(query, path)
+        query, path = job[0], job[1]
+        dom = job[2] if len(job) > 2 else self.DEFAULT_DOMAIN
+        return self._domains[self.canonical_domain(dom)][2].run(query, path)
 
     def _execute_stream(self, job, emit):
         """Streaming replica entry point: same final result as ``_execute``
         (bit-for-bit — ``run_stream``'s contract), chunks through ``emit``."""
-        query, path = job
-        return self.executor.run_stream(query, path, emit)
+        query, path = job[0], job[1]
+        dom = job[2] if len(job) > 2 else self.DEFAULT_DOMAIN
+        return self._domains[self.canonical_domain(dom)][2].run_stream(
+            query, path, emit)
 
     def _embed_entry(self, prompt: str) -> list:
-        """The mutable ``[embedding, resolved-index | None]`` cache entry for
-        ``prompt`` — LRU semantics and hit/miss accounting live here."""
+        """The mutable ``[embedding, {domain: resolved-index}]`` cache entry
+        for ``prompt`` — LRU semantics and hit/miss accounting live here.
+        The nearest-neighbor memo is keyed per domain: the same prompt
+        resolves against each domain shard's own query set."""
         with self._embed_lock:
             ent = self._embed_cache.get(prompt)
             if ent is not None:
                 self._embed_cache.move_to_end(prompt)
                 self.embed_cache_hits += 1
                 return ent
-        ent = [embed_text(prompt), None]
+        ent = [embed_text(prompt), {}]
         with self._embed_lock:
             self.embed_cache_misses += 1
             ent = self._embed_cache.setdefault(prompt, ent)
@@ -140,27 +231,41 @@ class EcoLLMServer:
         return self._embed_entry(prompt)[0]
 
     def _resolve_query(self, req: Request):
+        dom_name = self.canonical_domain(req.domain)
+        dom = self._domains[dom_name][0]
         if req.qid is not None:
-            return self.domain.queries[req.qid], self.domain.query_embeddings[req.qid]
+            return dom.queries[req.qid], dom.query_embeddings[req.qid]
         # open-world query: embed the raw prompt (memoized for repeats);
         # judge against the closest known query's metadata (OOD path).  The
-        # nearest-neighbor index is memoized in the cache entry, so a repeat
-        # prompt skips the full `query_embeddings @ emb` GEMV, not just the
-        # embedding recompute
+        # nearest-neighbor index is memoized in the cache entry per domain,
+        # so a repeat prompt skips the full `query_embeddings @ emb` GEMV,
+        # not just the embedding recompute
         ent = self._embed_entry(req.prompt)
-        qidx = ent[1]
+        qidx = ent[1].get(dom_name)
         if qidx is None:
-            sims = self.domain.query_embeddings @ ent[0]
+            sims = dom.query_embeddings @ ent[0]
             qidx = int(np.argmax(sims))
-            # benign race: argmax is deterministic in (prompt), so a racing
-            # writer stores the same value
-            ent[1] = qidx
-        return self.domain.queries[qidx], ent[0]
+            # benign race: argmax is deterministic in (prompt, domain), so a
+            # racing writer stores the same value
+            ent[1][dom_name] = qidx
+        return dom.queries[qidx], ent[0]
+
+    def _tenant_tracker(self, tenant: str) -> SLOTracker:
+        with self._embed_lock:  # reuse: cheap, never contended with embeds
+            tr = self._tenant_trackers.get(tenant)
+            if tr is None:
+                tr = self._tenant_trackers[tenant] = SLOTracker()
+            return tr
 
     def _respond(self, req: Request, query, decision, result, meta) -> Response:
         acc, lat, cost = result
         self.tracker.record(req.slo, lat, cost)
+        if req.tenant != DEFAULT_TENANT:
+            # per-tenant violation accounting; the default single-tenant
+            # path skips it entirely (no extra lock on the hot path)
+            self._tenant_tracker(req.tenant).record(req.slo, lat, cost)
         return Response(
+            tenant=req.tenant,
             text=f"[{decision.path.model.impl}] resolved {query.qtype} query",
             accuracy=acc,
             latency_s=lat,
@@ -209,7 +314,7 @@ class EcoLLMServer:
         admission = (orch.stats() if orch is not None else dict.fromkeys(
             ("queue_depth", "shed", "deadline_shed", "admitted", "batches"),
             0))
-        return {
+        state = {
             "replicas": fleet["replicas"],
             "hedges": fleet["hedges"],
             "failovers": fleet["failovers"],
@@ -217,6 +322,8 @@ class EcoLLMServer:
             "cancelled": fleet["cancelled"],
             "queue_depth": fleet["queue_depth"],
             "in_flight": fleet["in_flight"],
+            # per-shard dispatch attribution over the ONE shared fleet
+            "dispatched_by_shard": fleet.get("dispatched_by_tag", {}),
             "admission_queue_depth": admission["queue_depth"],
             "shed": admission["shed"],
             "deadline_shed": admission["deadline_shed"],
@@ -228,7 +335,24 @@ class EcoLLMServer:
             "requests": self.tracker.total,
             "rps_engine": "kernel" if self.rps.use_kernel else "numpy",
             # times the fused embed->retrieve->score->argmax program was
-            # (re)traced — bounded by distinct admission shape buckets
-            "fused_traces": self.rps.kernel_trace_count,
+            # (re)traced — bounded by distinct admission shape buckets.  On
+            # a multi-domain server the domain-sharded program's traces are
+            # folded in (one program serves every domain)
+            "fused_traces": self.rps.kernel_trace_count
+            + (self._sharded.kernel_trace_count
+               if self._sharded is not None else 0),
             "embed_cache": embed,
         }
+        with self._embed_lock:
+            tenant_trackers = dict(self._tenant_trackers)
+        if tenant_trackers:
+            state["tenants"] = {
+                name: {"requests": tr.total,
+                       "violations": tr.violated_queries,
+                       "violation_rate": tr.violation_rate}
+                for name, tr in tenant_trackers.items()}
+        if self._router is not None:
+            # per-tenant offered/admitted/served/shed counters + per-shard
+            # admission stats, folded from the router fronting this server
+            state["router"] = self._router.stats()
+        return state

@@ -281,6 +281,7 @@ def test_snapshot_is_consistent_and_matches_fields_at_quiescence():
         "cancelled": fleet.cancelled_count,
         "queue_depth": fleet.queue_depth(),
         "in_flight": fleet.in_flight(),
+        "dispatched_by_tag": dict(fleet.dispatched_by_tag),
     }
     assert snap["queue_depth"] == 0 and snap["in_flight"] == 0
     fleet.close()
@@ -308,3 +309,44 @@ def test_server_embed_memo_hits_on_repeated_prompt(monkeypatch):
     assert r1.path_key == r2.path_key
     server.handle(Request(prompt="a different prompt entirely"))
     assert calls["n"] == 2
+
+
+def test_replica_stats_p95_memoized_per_generation(monkeypatch):
+    """Micro-regression for the hedge monitor's hot path: repeated
+    ``p95()``/``p95_wall()`` calls sort the window at most once per record
+    generation, a new sample invalidates both memos, the memoized value
+    equals the direct computation, and below the 8-sample warmup floor the
+    per-call default passes straight through (never cached)."""
+    from repro.runtime.fleet import ReplicaStats
+
+    stats = ReplicaStats()
+    sorts = {"n": 0}
+    real_p95 = ReplicaStats._p95
+
+    def counting_p95(xs, default):
+        sorts["n"] += 1
+        return real_p95(xs, default)
+
+    monkeypatch.setattr(ReplicaStats, "_p95", staticmethod(counting_p95))
+
+    # warmup floor: < 8 samples returns the caller's default, no sort
+    for i in range(7):
+        stats.record_success(0.1 * (i + 1), 0.2 * (i + 1))
+    assert stats.p95(default=1.23) == 1.23
+    assert stats.p95_wall(default=4.56) == 4.56
+    assert sorts["n"] == 0
+
+    stats.record_success(0.8, 1.6)  # 8th sample: memoization kicks in
+    lat = [stats.p95() for _ in range(50)]
+    wall = [stats.p95_wall() for _ in range(50)]
+    assert sorts["n"] == 2  # one sort per window, not per call
+    assert len(set(lat)) == len(set(wall)) == 1
+    assert lat[0] == real_p95(list(stats.latencies), 0.5)
+    assert wall[0] == real_p95(list(stats.wall_latencies), 0.5)
+
+    stats.record_success(9.9, 19.8)  # invalidates BOTH memos
+    new_lat, new_wall = stats.p95(), stats.p95_wall()
+    stats.p95(), stats.p95_wall()
+    assert sorts["n"] == 4  # exactly one recompute each after invalidation
+    assert new_lat == real_p95(list(stats.latencies), 0.5) != lat[0]
+    assert new_wall == real_p95(list(stats.wall_latencies), 0.5) != wall[0]

@@ -423,3 +423,34 @@ def test_system_state_reports_admission_counters(served):
         assert isinstance(state[key], int)
     assert state["admitted"] >= 1 and state["dispatch_batches"] >= 1
     assert state["requests"] == server.tracker.total
+
+
+def test_reconfigure_overfull_carry_over_sheds_worst(served):
+    """Directed carry-over contract: shrinking ``max_queue`` below the
+    enqueued backlog keeps the BEST tickets (highest priority, FIFO within
+    priority), sheds exactly the overflow with ``queue_full``, loses
+    nothing, and the carried tickets still serve after start()."""
+    server, test_idx = served
+    orch = Orchestrator(server, max_batch=8, max_wait_ms=1.0, max_queue=8,
+                        hedge=False)
+
+    async def main():
+        # priorities 3,2,1,0,3,2,1,0 — the four prio>=2 tickets are "best"
+        tickets = [await orch.submit(
+            Request(prompt="", qid=test_idx[i % len(test_idx)], slo=SLO()),
+            priority=3 - (i % 4)) for i in range(8)]
+        orch.reconfigure(max_queue=4)  # loop not yet running: allowed
+
+        shed = [t for t in tickets if t.shed]
+        carried = [t for t in tickets if not t.done()]
+        assert len(shed) == 4 and len(carried) == 4  # none lost
+        assert sorted(t.priority for t in carried) == [2, 2, 3, 3]
+        assert sorted(t.priority for t in shed) == [0, 0, 1, 1]
+        assert all(t._future.result().reason == "queue_full" for t in shed)
+        async with orch:
+            return await asyncio.gather(*(t.wait() for t in carried))
+
+    resps = asyncio.run(main())
+    assert all(isinstance(r, Response) for r in resps)  # survivors served
+    st = orch.stats()
+    assert st["admitted"] == 8 and st["shed"] == 4 and st["completed"] == 4
