@@ -1,0 +1,389 @@
+"""Drift adaptation: adaptive tables recover accuracy + SLO-adherence.
+
+The closed-loop scenario the adaptation plane (``repro.runtime.adaptation``)
+exists for: a server is adapted offline under a LOW exploration budget (the
+table has sparsely-explored clusters), then serves an open-loop workload
+whose environment shifts mid-run —
+
+  * the query mix concentrates onto one cluster (picked as the cluster with
+    the most unevaluated table cells whose served paths the device slowdown
+    actually pushes past the SLO — the staleness is real, not assumed), and
+  * the edge device degrades (``DeviceProfile`` tflops/bandwidth divided by
+    ``SLOWDOWN``) — thermal throttling / contention, the runtime drift the
+    deploy-time table cannot know.
+
+Two identical servers serve the identical request schedule:
+
+  * frozen — the deploy-time table, never updated (today's baseline),
+  * adaptive — ``enable_adaptation``; the plane's ``pump()`` runs between
+    waves (deterministic stand-in for the background thread): outcome rings
+    fold into EWMA statistics, the SLO-violation monitor trips with
+    hysteresis, a targeted ``explore_targeted`` sweep re-measures ONLY the
+    stale cluster's rows against the LIVE (degraded) executor, and the
+    merged table hot-swaps into the selector (atomic version swap,
+    online-EWMA blend, per-row best-path relabel).
+
+Gates (smoke and full): after the shift the adaptive server's tail-window
+SLO-adherence is >= frozen's; the adaptive run performed >= 1 table swap;
+admission->selected p50 overhead with adaptation enabled stays within
+``OVERHEAD_FACTOR`` of frozen (+ a small absolute timer-fidelity
+allowance); fused-trace counts stay bounded by the distinct shape buckets
+(swaps never retrace — both servers run ``use_kernel=True``).
+
+Accuracy: smoke additionally requires adaptive tail accuracy >= frozen's
+outright.  Full instead gates on RECOVERY — tail accuracy back at (or
+above) the adaptive server's own pre-shift level and within
+``RECOVER_TOL`` of frozen — plus the bounded-recovery gate: SLO-adherence
+returns to within ``RECOVER_TOL`` of pre-shift within the post-shift waves
+(a bounded number of served queries).  The distinction is deliberate: the
+sweep relabels rows with ``find_best_path``'s own objective (the CHEAPEST
+path within the accuracy tolerance of the per-row max), so the adaptive
+optimum may sit a point below frozen's slow path while serving at a
+fraction of its latency/cost — frozen's extra accuracy arrives entirely
+on responses that blow their deadline.
+
+  PYTHONPATH=src python -m benchmarks.drift_adaptation [--smoke]
+"""
+from __future__ import annotations
+
+import asyncio
+from dataclasses import dataclass, field, replace as dc_replace
+
+import numpy as np
+
+from benchmarks import reporting
+from repro.core.rps import bucket_batch
+from repro.core.slo import SLO
+from repro.launch.serve import build_server
+from repro.runtime.orchestrator import Overloaded
+from repro.runtime.server import Request
+
+DOMAIN = "automotive"
+SEED = 1                  # calibrated: the drift scenario must exist (the
+                          # target picker verifies by simulation and raises
+                          # if the domain/seed/SLOWDOWN combination cannot
+                          # host it, so this never fails silently)
+SLO_LATENCY_S = 4.0       # cloud paths clear it; slowed edge paths blow it
+SLOWDOWN = 4.0            # edge tflops/bandwidth divisor at the shift
+OVERHEAD_FACTOR = 1.10    # adaptive p50 admission->selected vs frozen
+OVERHEAD_SLACK_S = 0.002  # absolute allowance: asyncio timer fidelity
+RECOVER_TOL = 0.10        # full: tail SLO rate within this of pre-shift
+MIN_SHIFT_QUERIES = 3     # a cluster needs this many test queries to host
+                          # the post-shift mix
+
+
+@dataclass
+class Result:
+    domain: str
+    table_rows: int
+    table_cells_unevaluated: float  # fraction, pre-run (sparse by design)
+    target_set: int
+    target_unevaluated: float       # unevaluated fraction of the target rows
+    shift_pool: int
+    # per-phase quality: [pre, post_tail] for each server
+    frozen_acc: list = field(default_factory=list)
+    frozen_slo: list = field(default_factory=list)
+    adaptive_acc: list = field(default_factory=list)
+    adaptive_slo: list = field(default_factory=list)
+    # adaptation activity
+    swaps: int = 0
+    final_table_version: int = 0
+    swept_queries: int = 0
+    waves_to_recover: int = -1      # post-shift waves until SLO recovery
+    queries_to_recover: int = -1
+    # overhead + trace bounds
+    overhead_p50_frozen_ms: float = 0.0
+    overhead_p50_adaptive_ms: float = 0.0
+    overhead_ratio: float = 0.0
+    fused_traces_frozen: int = 0
+    fused_traces_adaptive: int = 0
+    distinct_buckets: int = 0
+    gates: dict = field(default_factory=dict)
+
+
+def _degrade(server) -> None:
+    """The mid-run environment shift: the edge device throttles."""
+    dev = server.executor.device
+    server.executor.device = dc_replace(
+        dev, tflops=dev.tflops / SLOWDOWN, mem_gbps=dev.mem_gbps / SLOWDOWN)
+
+
+def _pick_target_set(server, test_idx, slo) -> tuple[int, list[int], float]:
+    """The cluster that hosts the post-shift mix.  A candidate cluster must
+    make the drift scenario REAL, verified by simulation on the degraded
+    device, not assumed:
+
+      * the frozen server's current decisions for its test queries violate
+        the SLO once the device throttles (so frozen demonstrably drifts
+        and the violation monitor has something to trip on), and
+      * among the cluster-eligible paths (``path_contains_set``) there is a
+        feasible escape whose measured accuracy beats what frozen keeps
+        serving — the headroom a targeted re-exploration can discover
+        (sparse deploy-time exploration mislabelled the cluster).
+
+    Among candidates, maximize the accuracy headroom."""
+    dom, sel, ex = server.domain_entry(None)
+    embs = dom.query_embeddings[test_idx]
+    decisions = sel.select_batch(embs, [slo] * len(test_idx))
+    by_set: dict[int, list] = {}
+    for qid, d in zip(test_idx, decisions):
+        by_set.setdefault(int(d.set_id), []).append((int(qid), d))
+    set_ids = np.asarray(sel.cca.set_ids)
+    done = sel.table.evaluated
+    paths = sel.table.paths
+
+    old_dev = ex.device
+    _degrade(server)
+    try:
+        cand = []
+        for s, pairs in by_set.items():
+            if len(pairs) < MIN_SHIFT_QUERIES:
+                continue
+            frozen = [ex.run(dom.queries[q], d.path) for q, d in pairs]
+            viol = float(np.mean([lat > slo.max_latency_s
+                                  for _, lat, _ in frozen]))
+            if viol < 0.5:
+                continue  # frozen would barely notice the shift
+            frozen_acc = float(np.mean([a for a, _, _ in frozen]))
+            best_acc = -np.inf
+            for j in np.where(sel.path_contains_set[s])[0]:
+                runs = [ex.run(dom.queries[q], paths[j]) for q, _ in pairs]
+                if max(lat for _, lat, _ in runs) > slo.max_latency_s * 0.95:
+                    continue  # not a feasible escape on the slow device
+                best_acc = max(best_acc,
+                               float(np.mean([a for a, _, _ in runs])))
+            headroom = best_acc - frozen_acc
+            if headroom < 0.02:
+                continue  # no better feasible path for adaptation to find
+            rows = np.where(set_ids == s)[0]
+            unexplored = 1.0 - float(done[rows].mean()) if len(rows) else 0.0
+            cand.append((headroom, unexplored, s,
+                         [q for q, _ in pairs]))
+    finally:
+        ex.device = old_dev
+
+    if not cand:
+        raise RuntimeError(
+            "no cluster hosts the drift scenario (need >= "
+            f"{MIN_SHIFT_QUERIES} test queries whose frozen decisions "
+            "violate the degraded-device SLO with a feasible higher-"
+            "accuracy escape) — sizes/SLOWDOWN/SLO are mis-calibrated")
+    cand.sort(key=lambda c: -c[0])
+    _, unexplored, s, qids = cand[0]
+    return s, qids, unexplored
+
+
+async def _serve_waves(server, plane, waves, *, shift_at: int,
+                       max_batch: int):
+    """Serve ``waves`` (lists of Requests) through the async orchestrator;
+    degrade the device when wave ``shift_at`` starts; pump the plane (when
+    present) after every wave.  Returns per-wave rows of
+    (accuracy, slo_ok, overhead_s, table_version)."""
+    orch = server.orchestrator(max_batch=max_batch, max_wait_ms=2.0,
+                               max_queue=4096)
+    await orch.start()
+    out = []
+    for i, wave in enumerate(waves):
+        if i == shift_at:
+            _degrade(server)
+        tickets = [await orch.submit(req) for req in wave]
+        results = await asyncio.gather(*(t.wait() for t in tickets))
+        rows = []
+        for t, r in zip(tickets, results):
+            if isinstance(r, Overloaded):
+                continue
+            sel_t, adm_t = t.event("selected"), t.event("admitted")
+            ovh = (sel_t - adm_t) if sel_t and adm_t else float("nan")
+            rows.append((r.accuracy, bool(r.slo_ok), ovh,
+                        int(r.meta.get("table_version", 0))))
+        out.append(rows)
+        if plane is not None:
+            plane.pump()
+    await orch.stop()
+    return out
+
+
+def _waves(test_idx, shift_pool, rng, *, pre, post, batch, slo):
+    """The request schedule: ``pre`` waves of the mixed test distribution,
+    then ``post`` waves concentrated on the shifted cluster."""
+    waves = []
+    for _ in range(pre):
+        qids = rng.choice(test_idx, size=batch, replace=True)
+        waves.append([Request(prompt="", qid=int(q), slo=slo) for q in qids])
+    for _ in range(post):
+        qids = rng.choice(shift_pool, size=batch, replace=True)
+        waves.append([Request(prompt="", qid=int(q), slo=slo) for q in qids])
+    return waves
+
+
+def _phase_stats(wave_rows):
+    accs = [a for rows in wave_rows for (a, ok, o, v) in rows]
+    oks = [ok for rows in wave_rows for (a, ok, o, v) in rows]
+    return (float(np.mean(accs)) if accs else float("nan"),
+            float(np.mean(oks)) if oks else float("nan"))
+
+
+def run(*, smoke: bool = False, seed: int = SEED) -> Result:
+    n_queries = 60 if smoke else 100
+    budget = 1.5 if smoke else 2.0       # LOW on purpose: sparse table
+    batch = 12 if smoke else 16
+    pre_waves = 2 if smoke else 3
+    post_waves = 5 if smoke else 10
+    tail = 2 if smoke else 4             # post-shift tail window (waves)
+    sweep_cap = 12 if smoke else 24
+    slo = SLO(max_latency_s=SLO_LATENCY_S)
+
+    def fresh_server():
+        server, idx = build_server(DOMAIN, n_queries=n_queries,
+                                   budget=budget, seed=seed, use_kernel=True)
+        # trace both shape buckets up front: the overhead gate compares
+        # steady-state selection, not whichever run paid jit compile
+        dom, sel, _ = server.domain_entry(None)
+        warm = dom.query_embeddings[:batch]
+        sel.select_batch(np.asarray(warm), [slo] * len(warm))
+        sel.select_batch(np.asarray(warm[:1]), [slo])
+        return server, idx
+
+    server_f, test_idx = fresh_server()
+    target, shift_pool, target_unexplored = _pick_target_set(
+        server_f, list(map(int, test_idx)), slo)
+    done = server_f.rps.table.evaluated
+    sparse = 1.0 - float(done.mean())
+
+    # identical schedules: same rng seed for both servers
+    def schedule():
+        rng = np.random.default_rng(seed + 1)
+        return _waves(list(map(int, test_idx)), shift_pool, rng,
+                      pre=pre_waves, post=post_waves, batch=batch, slo=slo)
+
+    # -- frozen baseline ------------------------------------------------------
+    rows_f = asyncio.run(_serve_waves(server_f, None, schedule(),
+                                      shift_at=pre_waves, max_batch=batch))
+
+    # -- adaptive -------------------------------------------------------------
+    server_a, _ = fresh_server()
+    server_a.enable_adaptation(
+        start=False,                 # pump() between waves: deterministic
+        decay=0.15, drift_decay=0.1,
+        viol_threshold=0.3, min_obs=6.0,
+        trip_folds=2, cooldown_folds=3,
+        max_sweep_queries=sweep_cap, blend_prior=4.0)
+    plane = server_a.adaptation
+    rows_a = asyncio.run(_serve_waves(server_a, plane, schedule(),
+                                      shift_at=pre_waves, max_batch=batch))
+
+    # -- metrics --------------------------------------------------------------
+    pre_f = _phase_stats(rows_f[:pre_waves])
+    pre_a = _phase_stats(rows_a[:pre_waves])
+    tail_f = _phase_stats(rows_f[-tail:])
+    tail_a = _phase_stats(rows_a[-tail:])
+
+    waves_rec, q_rec = -1, -1
+    for i, rows in enumerate(rows_a[pre_waves:]):
+        _, ok_rate = _phase_stats([rows])
+        if ok_rate >= pre_a[1] - RECOVER_TOL:
+            waves_rec = i + 1
+            q_rec = sum(len(r) for r in rows_a[pre_waves:pre_waves + i + 1])
+            break
+
+    # overhead compares the PRE-shift window: both servers make identical
+    # decisions there, so the delta is the plane's hot-path cost (the ring
+    # append + fold), not a different post-drift selection route
+    ovh_f = [o for rows in rows_f[:pre_waves] for (a, ok, o, v) in rows
+             if np.isfinite(o)]
+    ovh_a = [o for rows in rows_a[:pre_waves] for (a, ok, o, v) in rows
+             if np.isfinite(o)]
+    p50_f = float(np.percentile(ovh_f, 50))
+    p50_a = float(np.percentile(ovh_a, 50))
+
+    # every batch size this run submits to the fused pass: serving
+    # micro-batches (1..batch), the warmup shapes, and the target picker's
+    # whole-test-set select on the frozen server
+    buckets = ({bucket_batch(b) for b in range(1, batch + 1)}
+               | {bucket_batch(len(test_idx))})
+    r = Result(
+        domain=DOMAIN, table_rows=len(server_f.rps.table.query_ids),
+        table_cells_unevaluated=sparse, target_set=target,
+        target_unevaluated=target_unexplored, shift_pool=len(shift_pool),
+        frozen_acc=[pre_f[0], tail_f[0]], frozen_slo=[pre_f[1], tail_f[1]],
+        adaptive_acc=[pre_a[0], tail_a[0]],
+        adaptive_slo=[pre_a[1], tail_a[1]],
+        swaps=plane.swaps, final_table_version=server_a.rps.table_version,
+        swept_queries=sum(e["queries_swept"] for e in plane.swap_log),
+        waves_to_recover=waves_rec, queries_to_recover=q_rec,
+        overhead_p50_frozen_ms=p50_f * 1e3,
+        overhead_p50_adaptive_ms=p50_a * 1e3,
+        overhead_ratio=p50_a / max(p50_f, 1e-9),
+        fused_traces_frozen=server_f.rps.kernel_trace_count,
+        fused_traces_adaptive=server_a.rps.kernel_trace_count,
+        distinct_buckets=len(buckets))
+    r.gates = {
+        "adaptive_swapped": r.swaps >= 1,
+        "slo_recovered_vs_frozen": tail_a[1] >= tail_f[1],
+        "overhead_within_factor":
+            p50_a <= p50_f * OVERHEAD_FACTOR + OVERHEAD_SLACK_S,
+        "traces_bounded":
+            max(r.fused_traces_frozen, r.fused_traces_adaptive)
+            <= len(buckets),
+    }
+    if smoke:
+        r.gates["acc_recovered_vs_frozen"] = tail_a[0] >= tail_f[0]
+    else:
+        r.gates["acc_recovered"] = (tail_a[0] >= pre_a[0]
+                                    and tail_a[0] >= tail_f[0] - RECOVER_TOL)
+        r.gates["recovered_within_bound"] = 0 < waves_rec <= post_waves
+    return r
+
+
+def render(r: Result) -> str:
+    return "\n".join([
+        f"drift adaptation on {r.domain} ({r.table_rows} train rows, "
+        f"{r.table_cells_unevaluated * 100:.0f}% cells unexplored):",
+        f"  shift              cluster {r.target_set} "
+        f"({r.target_unevaluated * 100:.0f}% unexplored, "
+        f"{r.shift_pool} test queries), edge device {SLOWDOWN:.0f}x slower",
+        f"  frozen             acc {r.frozen_acc[0] * 100:.1f}% -> "
+        f"{r.frozen_acc[1] * 100:.1f}%   slo {r.frozen_slo[0] * 100:.1f}% -> "
+        f"{r.frozen_slo[1] * 100:.1f}%",
+        f"  adaptive           acc {r.adaptive_acc[0] * 100:.1f}% -> "
+        f"{r.adaptive_acc[1] * 100:.1f}%   slo "
+        f"{r.adaptive_slo[0] * 100:.1f}% -> {r.adaptive_slo[1] * 100:.1f}%",
+        f"  adaptation         {r.swaps} swap(s) (table v"
+        f"{r.final_table_version}), {r.swept_queries} queries re-explored, "
+        f"recovered in {r.waves_to_recover} wave(s) "
+        f"({r.queries_to_recover} queries)",
+        f"  overhead p50       frozen {r.overhead_p50_frozen_ms:.2f} ms, "
+        f"adaptive {r.overhead_p50_adaptive_ms:.2f} ms "
+        f"({r.overhead_ratio:.2f}x, gate {OVERHEAD_FACTOR:.2f}x)",
+        f"  fused traces       frozen {r.fused_traces_frozen}, adaptive "
+        f"{r.fused_traces_adaptive} (swaps included) over "
+        f"{r.distinct_buckets} buckets",
+        f"  gates              {r.gates}",
+    ])
+
+
+def main(argv=None) -> None:
+    smoke = reporting.smoke_flag(argv)
+    r = run(smoke=smoke)
+    print(render(r))
+    assert r.gates["adaptive_swapped"], \
+        "drift never tripped a table swap"
+    assert r.gates["slo_recovered_vs_frozen"], \
+        "adaptive tables did not recover SLO-adherence vs frozen"
+    assert r.gates["overhead_within_factor"], \
+        f"adaptation hot-path overhead {r.overhead_ratio:.2f}x frozen"
+    assert r.gates["traces_bounded"], \
+        "table swaps retraced the fused selection pass"
+    if smoke:
+        assert r.gates["acc_recovered_vs_frozen"], \
+            "adaptive tables did not recover accuracy vs frozen"
+    else:
+        assert r.gates["acc_recovered"], \
+            "adaptive tail accuracy did not recover"
+        assert r.gates["recovered_within_bound"], \
+            "adaptive SLO-adherence never recovered within the run"
+    reporting.emit("drift_adaptation", r, smoke=smoke)
+
+
+if __name__ == "__main__":
+    main()

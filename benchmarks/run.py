@@ -164,6 +164,22 @@ def bench_multitenant() -> None:
          f"thpt_4sh={r.thpt_qps_by_shards.get(4, 0.0):.0f}qps")
 
 
+def bench_drift() -> None:
+    from benchmarks import drift_adaptation as da
+
+    t0 = time.time()
+    r = da.run()
+    print("\n=== Drift: adaptive vs frozen tables under a mid-run shift ===")
+    print(da.render(r))
+    _csv("drift_adaptation", (time.time() - t0) * 1e6,
+         f"swaps={r.swaps};tail_slo_adaptive={r.adaptive_slo[1]:.2f};"
+         f"tail_slo_frozen={r.frozen_slo[1]:.2f};"
+         f"recovered_waves={r.waves_to_recover};"
+         f"overhead={r.overhead_ratio:.2f}x;"
+         f"traces={max(r.fused_traces_frozen, r.fused_traces_adaptive)}"
+         f"/{r.distinct_buckets}")
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline as rl
     from repro.perf.roofline import render
@@ -218,6 +234,7 @@ BENCHES = {
     "select": bench_select,
     "serving": bench_serving,
     "multitenant": bench_multitenant,
+    "drift": bench_drift,
     "fleet": bench_fleet,
     "kernels": bench_kernels,
     "table3": bench_table3,

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import math
 import random
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -58,19 +60,157 @@ class EvalTable:
     def row(self, qid: int) -> int:
         return self.query_ids.index(qid)
 
+    def updated(self, sub: "EvalTable") -> "EvalTable":
+        """A copy of this table with ``sub``'s evaluated cells merged in.
+
+        ``sub`` is a targeted re-exploration over a SUBSET of this table's
+        query ids (same path space); its evaluated cells overwrite the
+        corresponding rows here.  The receiver is untouched — the merge is
+        the build-aside half of an atomic table swap
+        (``RuntimePathSelector.swap_table``), so the serving snapshot must
+        never be mutated in place.
+        """
+        if len(sub.paths) != len(self.paths):
+            raise ValueError(
+                f"merge needs one shared path space: {len(sub.paths)} != "
+                f"{len(self.paths)}")
+        acc, lat = self.accuracy.copy(), self.latency.copy()
+        cost, done = self.cost.copy(), self.evaluated.copy()
+        for si, qid in enumerate(sub.query_ids):
+            ri = self.row(qid)
+            m = sub.evaluated[si]
+            acc[ri, m] = sub.accuracy[si, m]
+            lat[ri, m] = sub.latency[si, m]
+            cost[ri, m] = sub.cost[si, m]
+            done[ri, m] = True
+        return EvalTable(
+            query_ids=list(self.query_ids), paths=list(self.paths),
+            accuracy=acc, latency=lat, cost=cost, evaluated=done,
+            cache_stats=dict(self.cache_stats))
+
+
+class StageCacheLRU:
+    """Bounded LRU over the emulator's stage-prefix cache.
+
+    Implements exactly the dict subset the executors use (``get`` /
+    ``setdefault`` / ``[]`` / ``len``), with reads counting as LRU touches
+    and eviction on insert.  Thread-safe: sweeps may share one cache
+    across threads, and ``OrderedDict`` reordering is not safe lock-free.
+    Eviction never changes results — stage states are deterministic
+    functions of their prefix key, an evicted prefix is simply recomputed
+    (the miss/eviction counters make the cost visible via
+    ``Emulator.stats()``).
+
+    ``maxsize`` must exceed one block sweep's prefix working set
+    (<= 3 * |paths| keys, all touched in dependency order) so a parent
+    state is never evicted before the same block reads it back.
+    """
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = int(maxsize)
+        self.evictions = 0
+        self._d: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+
+    def get(self, key, default=None):
+        with self._lock:
+            try:
+                v = self._d[key]
+            except KeyError:
+                return default
+            self._d.move_to_end(key)
+            return v
+
+    def __getitem__(self, key):
+        with self._lock:
+            v = self._d[key]
+            self._d.move_to_end(key)
+            return v
+
+    def setdefault(self, key, value):
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                return self._d[key]
+            self._d[key] = value
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+                self.evictions += 1
+            return value
+
+    def __setitem__(self, key, value) -> None:
+        self.setdefault(key, value)
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._d
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+
 
 class Emulator:
     def __init__(self, domain: DomainData, space: PathSpace,
-                 device: DeviceProfile | None = None, seed: int = 0):
+                 device: DeviceProfile | None = None, seed: int = 0,
+                 *, executor: PipelineExecutor | None = None,
+                 stage_cache_max: int | None = None):
+        """``executor`` lets a caller (the online adaptation plane) run the
+        sweep through the SERVING pipeline executor — same device profile,
+        same retrieval memos — so re-explored rows measure the environment
+        the runtime actually dispatches into, not a fresh replica of the
+        deploy-time one.  ``stage_cache_max`` bounds the stage-prefix cache
+        with LRU eviction (long-lived serving processes re-explore
+        repeatedly); the default ``None`` keeps the pre-existing unbounded
+        dict, which the bit-for-bit parity suites rely on."""
         self.domain = domain
         self.space = space
-        self.device = device or EDGE_DEVICES["m4"]
-        self.seed = seed
-        self.exec = PipelineExecutor(domain, self.device, seed=seed)
+        self.seed = executor.seed if executor is not None else seed
+        self.exec = executor if executor is not None else PipelineExecutor(
+            domain, device or EDGE_DEVICES["m4"], seed=seed)
+        self.device = self.exec.device
         self.batched = BatchedPipelineExecutor(self.exec, space.paths)
-        self._stage_cache: dict = {}
+        self.stage_cache_max = stage_cache_max
+        self._stage_cache = ({} if stage_cache_max is None
+                             else StageCacheLRU(stage_cache_max))
         self._cache_hits = 0
         self._cache_misses = 0
+
+    def stats(self) -> dict:
+        """Stage-prefix cache counters (hits/misses/evictions/size)."""
+        return {
+            "hits": self._cache_hits,
+            "misses": self._cache_misses,
+            "evictions": (self._stage_cache.evictions
+                          if isinstance(self._stage_cache, StageCacheLRU)
+                          else 0),
+            "size": len(self._stage_cache),
+            "bounded": self.stage_cache_max is not None,
+        }
+
+    def reset_stage_cache(self) -> None:
+        """Drop every cached stage state (counters keep accumulating).
+
+        Cached states bake the device profile's stage latencies at
+        evaluation time, so a caller observing environment drift (the
+        adaptation plane, before a re-exploration sweep) must reset the
+        cache or the sweep would re-serve pre-drift measurements."""
+        self._stage_cache.clear()
+
+    def refresh_environment(self) -> None:
+        """Re-measure against the executor's CURRENT device profile.
+
+        The batched engine bakes per-path latency/cost columns at
+        construction and cached stage states bake them at evaluation, so
+        both must be rebuilt when the environment may have drifted — the
+        adaptation plane calls this before every targeted sweep."""
+        self.batched = BatchedPipelineExecutor(self.exec, self.space.paths)
+        self.reset_stage_cache()
 
     # -- cached staged execution -------------------------------------------
 
@@ -225,6 +365,31 @@ class Emulator:
                 "exhaustive_evaluations": Q * P,
             },
         )
+
+    def explore_targeted(self, query_ids: list[int], *,
+                         max_queries: int | None = None,
+                         batched: bool = True,
+                         prefetch: bool = True) -> EvalTable:
+        """Cluster-scoped re-exploration: exhaustive sweep over ONLY the
+        given query neighborhood (the adaptation plane passes the rows of
+        the clusters a drift monitor flagged stale).
+
+        No budget stratification — the caller already narrowed the query
+        set, so every (query, path) cell is re-measured against the current
+        environment.  ``max_queries`` bounds the sweep (first-come order,
+        deduplicated); merge the result into a serving table with
+        ``EvalTable.updated`` and swap it in with
+        ``RuntimePathSelector.swap_table``.
+        """
+        seen: set[int] = set()
+        qids = [q for q in query_ids
+                if not (q in seen or seen.add(q))]
+        if max_queries is not None:
+            qids = qids[:max_queries]
+        if not qids:
+            raise ValueError("explore_targeted needs >= 1 query id")
+        return self.explore(qids, budget=None, batched=batched,
+                            prefetch=prefetch)
 
 
 def pareto_front(points: np.ndarray) -> np.ndarray:

@@ -515,30 +515,44 @@ class BatchedPipelineExecutor:
         # writes go through the atomic dict.setdefault so a concurrently
         # shared prefix cache keeps one canonical state per key (a racing
         # thread recomputes the same deterministic state and discards it);
-        # `prev is st` keeps the miss count exact in the single-thread case
+        # `prev is st` keeps the miss count exact in the single-thread case.
+        # `local` pins this row's resolved prefixes: a bounded (LRU) cache
+        # may evict a parent between levels, so parents are read from the
+        # pin, never back out of the shared cache
+        local: dict = {}
+
+        def resolve(key, compute):
+            nonlocal n_new
+            st = local.get(key)
+            if st is None:
+                st = cache.get(key)
+            if st is None:
+                st = compute()
+                canon = cache.setdefault(key, st)
+                if canon is st:
+                    n_new += 1
+                st = canon
+            local[key] = st
+            return st
+
         for s in slots1:
-            key = root + self.s1_suffix[s]
-            if cache.get(key) is None:
+            def _q(s=s):
+                nonlocal st0
                 if st0 is None:
                     st0 = ex.initial_state(q)
-                st = ex.run_qproc(q, self.s1_choice[s], st0)
-                if cache.setdefault(key, st) is st:
-                    n_new += 1
+                return ex.run_qproc(q, self.s1_choice[s], st0)
+            resolve(root + self.s1_suffix[s], _q)
         for s in slots2:
-            key = root + self.s2_suffix[s]
-            if cache.get(key) is None:
-                parent = cache[root + self.s1_suffix[self.s2_parent[s]]]
-                st = ex.run_retrieval(q, self.s2_choice[s], parent)
-                if cache.setdefault(key, st) is st:
-                    n_new += 1
+            resolve(root + self.s2_suffix[s],
+                    lambda s=s: ex.run_retrieval(
+                        q, self.s2_choice[s],
+                        local[root + self.s1_suffix[self.s2_parent[s]]]))
         for s in slots3:
-            key = root + self.s3_suffix[s]
-            if cache.get(key) is None:
-                parent = cache[root + self.s2_suffix[self.s3_parent[s]]]
-                st = ex.run_cproc(q, self.s3_choice[s], parent)
-                if cache.setdefault(key, st) is st:
-                    n_new += 1
-        states = [cache[root + self.s3_suffix[s]] for s in slots3]
+            resolve(root + self.s3_suffix[s],
+                    lambda s=s: ex.run_cproc(
+                        q, self.s3_choice[s],
+                        local[root + self.s2_suffix[self.s3_parent[s]]]))
+        states = [local[root + self.s3_suffix[s]] for s in slots3]
         return states, inv, n_new
 
     # -- vectorized model + judge -------------------------------------------

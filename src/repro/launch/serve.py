@@ -21,6 +21,10 @@ latency / cost / SLO attainment.  Serving modes:
 (edge drafts chunks behind a confidence gate, cloud verifies low-confidence
 spans) so the selector can route draft/verify paths per query/SLO.
 
+``--adapt`` attaches the online adaptation plane (``runtime/adaptation.py``):
+served outcomes feed per-shard drift monitors and a tripped monitor
+hot-swaps targeted re-explored table rows into the selector mid-run.
+
 Multi-tenant mode (``--tenants N``, requires ``--async``): N tenants with a
 Zipf(``--zipf``) popularity profile submit through the sharded
 ``TenantRouter`` (``--shards`` admission shards, ``--slo-class`` service
@@ -237,14 +241,34 @@ def main() -> None:
                     help="service tier for the generated tenants")
     ap.add_argument("--zipf", type=float, default=1.1,
                     help="Zipf exponent for the tenant popularity profile")
+    ap.add_argument("--adapt", action="store_true",
+                    help="enable the online adaptation plane (drift-aware "
+                         "continual table updates; requires --async or "
+                         "--repl — the sync shims bypass the outcome hooks)")
+    ap.add_argument("--adapt-decay", type=float, default=0.05,
+                    help="EWMA step for online per-path statistics")
+    ap.add_argument("--adapt-viol-threshold", type=float, default=0.35,
+                    help="SLO-violation rate that counts as drift")
+    ap.add_argument("--adapt-interval-ms", type=float, default=50.0,
+                    help="background fold/pump period")
+    ap.add_argument("--adapt-sweep-queries", type=int, default=16,
+                    help="query cap per targeted re-exploration sweep")
     args = ap.parse_args()
     if args.tenants and not args.use_async:
         ap.error("--tenants requires --async")
+    if args.adapt and not (args.use_async or args.repl):
+        ap.error("--adapt requires --async or --repl")
 
     server, test_idx = build_server(args.domain, n_queries=args.queries,
                                     budget=args.budget, lam=int(args.latency_first),
                                     use_kernel=args.use_kernel, split=args.split)
     slo = SLO(max_latency_s=args.max_latency, max_cost_usd=args.max_cost)
+    if args.adapt:
+        server.enable_adaptation(
+            decay=args.adapt_decay,
+            viol_threshold=args.adapt_viol_threshold,
+            fold_interval_s=args.adapt_interval_ms / 1e3,
+            max_sweep_queries=args.adapt_sweep_queries)
     if args.repl:
         asyncio.run(repl(server, slo))
         return
@@ -291,6 +315,15 @@ def main() -> None:
     print(f"  TTFT          {np.mean(lats):.2f}s (p95 {np.percentile(lats, 95):.2f}s)")
     print(f"  cost          ${np.mean(costs)*1000:.2f} /1k queries")
     print(f"  selection     {np.mean(ovh)*1e3:.1f} ms")
+    if args.adapt:
+        plane = server.adaptation
+        plane.pump()  # fold the tail of the run before reporting
+        plane.close()
+        a = plane.state()
+        print(f"  adaptation    {a['swaps']} table swap(s), "
+              f"{a['sweeps']} targeted sweep(s), "
+              f"{a['pending_sweeps']} pending; "
+              f"table v{server.rps.table_version}")
     print(f"  system state  {server.system_state()}")
 
 

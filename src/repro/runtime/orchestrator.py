@@ -224,6 +224,15 @@ class Orchestrator:
         self.dispatched = 0
         self.completed = 0  # executions that produced a Response
         self.failed = 0     # executions whose await re-raises
+        # online adaptation observer (runtime/adaptation.py); None keeps the
+        # settle/shed hooks at a single attribute load on the hot path
+        self._adaptation = None
+
+    def attach_adaptation(self, plane) -> None:
+        """Attach an ``AdaptationPlane`` observer: every settled/shed
+        outcome is appended (lock-free ring write, no table access) from
+        the ``_note_*`` hooks.  Pass ``None`` to detach."""
+        self._adaptation = plane
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -399,15 +408,22 @@ class Orchestrator:
                 Overloaded(reason, self._queue_depth(), self.max_queue))
         ticket._end_stream()
 
-    # -- per-tenant accounting hooks (no-ops here; AdmissionShard overrides).
-    # Both run UNDER self._stats_lock so shard counters stay consistent with
-    # the aggregate ones they refine.
+    # -- outcome hooks (AdmissionShard overrides add per-tenant accounting
+    # and MUST call super() so adaptation observation still fires).  Both
+    # run UNDER self._stats_lock so shard counters stay consistent with the
+    # aggregate ones they refine; the adaptation observer is a bounded ring
+    # append — producers are serialized by this very lock, and the fold work
+    # happens on the plane's background thread, never here.
 
     def _note_shed(self, ticket: Ticket, reason: str) -> None:
-        pass
+        plane = self._adaptation
+        if plane is not None:
+            plane.observe_shed(self, ticket, reason)
 
     def _note_settled(self, ticket: Ticket, resp, err) -> None:
-        pass
+        plane = self._adaptation
+        if plane is not None:
+            plane.observe_settled(self, ticket, resp, err)
 
     def _purge_lapsed(self) -> int:
         """Shed queued tickets whose admission deadline already lapsed, so
@@ -652,3 +668,9 @@ class Orchestrator:
                 "max_queue": self.max_queue,
                 "shard_id": self.shard_id,
             }
+
+    def adaptation_state(self) -> Optional[dict]:
+        """This orchestrator's (shard's) adaptation-plane telemetry, or
+        None when no plane is attached."""
+        plane = self._adaptation
+        return None if plane is None else plane.shard_state(self)

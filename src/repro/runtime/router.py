@@ -215,6 +215,8 @@ class AdmissionShard(Orchestrator):
         s = self._tstats(ticket.request.tenant)
         s["shed"] += 1
         s["shed_reasons"][reason] = s["shed_reasons"].get(reason, 0) + 1
+        # base hook feeds the adaptation observer (ring append only)
+        super()._note_shed(ticket, reason)
 
     def _note_settled(self, ticket: Ticket, resp, err) -> None:
         s = self._tstats(ticket.request.tenant)
@@ -224,6 +226,7 @@ class AdmissionShard(Orchestrator):
             s["served"] += 1
             if resp is not None and not resp.slo_ok:
                 s["violations"] += 1
+        super()._note_settled(ticket, resp, err)
 
     # -- admission ------------------------------------------------------------
 
@@ -460,6 +463,15 @@ class TenantRouter:
         for spec in self.tenants.values():
             self._buckets[spec.name] = TokenBucket(spec.rate_qps, spec.burst)
         server._router = self
+        # the adaptation plane hangs PER ADMISSION SHARD: if the server
+        # already enabled one, every shard observes its own outcomes (and a
+        # later enable_adaptation() attaches through shard_list())
+        if getattr(server, "_adaptation", None) is not None:
+            for sh in self.shards:
+                sh.attach_adaptation(server._adaptation)
+
+    def shard_list(self) -> list[AdmissionShard]:
+        return list(self.shards)
 
     def _effective_weights(self, tenants: Iterable[TenantSpec]) -> dict:
         weights = {}
@@ -549,7 +561,7 @@ class TenantRouter:
         for name, t in tenants.items():
             t.setdefault("offered", 0)
             t["shard"] = self.shard_index(name)
-        return {
+        out = {
             "n_shards": self.n_shards,
             "tenants": tenants,
             "shards": [{k: st[k] for k in
@@ -558,3 +570,10 @@ class TenantRouter:
                          "queue_depth")}
                        for st in shard_stats],
         }
+        # per-shard adaptation telemetry (drift monitors, ring fill, sweep
+        # counts) when an AdaptationPlane is attached
+        for row, sh in zip(out["shards"], self.shards):
+            adapt = sh.adaptation_state()
+            if adapt is not None:
+                row["adaptation"] = adapt
+        return out

@@ -127,6 +127,7 @@ class EcoLLMServer:
                                   max_workers=max_workers)
         self._orchestrator: Optional[Orchestrator] = None
         self._orch_lock = threading.Lock()
+        self._adaptation = None  # AdaptationPlane, enable_adaptation()
 
     def orchestrator(self, **kwargs) -> Orchestrator:
         """The async serving front-end bound to this server, created lazily
@@ -138,9 +139,52 @@ class EcoLLMServer:
         with self._orch_lock:
             if self._orchestrator is None:
                 self._orchestrator = Orchestrator(self, **kwargs)
+                if self._adaptation is not None:
+                    self._orchestrator.attach_adaptation(self._adaptation)
             elif kwargs:
                 self._orchestrator.reconfigure(**kwargs)
             return self._orchestrator
+
+    # -- online adaptation ----------------------------------------------------
+
+    def enable_adaptation(self, *, config=None, start: bool = True, **knobs):
+        """Attach an online ``AdaptationPlane`` (``runtime/adaptation.py``)
+        to every admission seam of this server: the lazily-built default
+        orchestrator and, when a ``TenantRouter`` fronts the server, each of
+        its admission shards (the router attaches shards of a later
+        ``attach_router`` call too).  ``knobs`` are ``AdaptConfig`` fields;
+        ``start=False`` skips the background fold thread (deterministic
+        tests drive ``plane.pump()`` by hand).  Idempotent."""
+        from repro.runtime.adaptation import AdaptationPlane, AdaptConfig
+
+        if self._adaptation is not None:
+            return self._adaptation
+        cfg = config if config is not None else AdaptConfig(**knobs)
+        plane = AdaptationPlane(self, config=cfg)
+        self._adaptation = plane
+        with self._orch_lock:
+            if self._orchestrator is not None:
+                self._orchestrator.attach_adaptation(plane)
+        if self._router is not None:
+            for sh in self._router.shard_list():
+                sh.attach_adaptation(plane)
+        if start:
+            plane.start()
+        return plane
+
+    @property
+    def adaptation(self):
+        return self._adaptation
+
+    def notify_table_swap(self, domain: Optional[str] = None) -> None:
+        """Called after a per-domain ``swap_table``: restack the
+        domain-sharded fused selector (if built) so multi-domain selection
+        serves the new snapshot.  The single-domain selector needs nothing —
+        its swap already published atomically."""
+        with self._domains_lock:
+            sharded = self._sharded
+        if sharded is not None:
+            sharded.refresh_tables()
 
     # -- domain composition ---------------------------------------------------
 
@@ -277,6 +321,7 @@ class EcoLLMServer:
             meta={"set_id": decision.set_id, "fallback": decision.used_fallback,
                   "attempts": meta["attempts"],
                   "batch_overhead_s": decision.batch_overhead_s,
+                  "table_version": decision.table_version,
                   "hedges": meta.get("hedges", 0),
                   "requeues": meta.get("requeues", 0)},
         )
@@ -355,4 +400,12 @@ class EcoLLMServer:
             # per-tenant offered/admitted/served/shed counters + per-shard
             # admission stats, folded from the router fronting this server
             state["router"] = self._router.stats()
+        with self._domains_lock:
+            state["table_versions"] = {
+                n: sel.table_version
+                for n, (_, sel, _) in self._domains.items()}
+        if self._adaptation is not None:
+            # online-adaptation telemetry: per-shard observed/dropped rings,
+            # drift-monitor levels, sweep/swap counts
+            state["adaptation"] = self._adaptation.state()
         return state
