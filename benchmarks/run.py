@@ -180,6 +180,19 @@ def bench_drift() -> None:
          f"/{r.distinct_buckets}")
 
 
+def bench_placement() -> None:
+    from benchmarks import placement_pipeline as pp
+
+    t0 = time.time()
+    r = pp.run(smoke=True)  # decision/parity gates; full sweep is nightly
+    print("\n=== Placement: pipelined edge-cloud stage splits vs monolithic ===")
+    print(pp.render(r))
+    _csv("placement_pipeline", (time.time() - t0) * 1e6,
+         f"plans={r.n_plans};sim_parity={r.sim_parity_ok};"
+         f"win={r.win_pipelined_s:.2f}s_vs_{r.win_monolithic_s}s;"
+         f"monotonic={r.monotonic_ok}")
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline as rl
     from repro.perf.roofline import render
@@ -235,6 +248,7 @@ BENCHES = {
     "serving": bench_serving,
     "multitenant": bench_multitenant,
     "drift": bench_drift,
+    "placement": bench_placement,
     "fleet": bench_fleet,
     "kernels": bench_kernels,
     "table3": bench_table3,

@@ -22,6 +22,13 @@ MODULES = ("qproc", "retrieval", "cproc", "model")
 # stays byte-identical.
 SPLIT_IMPL = "split"
 
+# virtual model impl for pipelined layer placement (runtime/placement.py):
+# the catalog model's layer stack is partitioned into contiguous stages
+# across a device chain by the roofline + link cost model.  Parameters name
+# the underlying catalog model and the "+"-joined chain.  Opt-in via
+# `with_placements` — same byte-identical-default contract as SPLIT_IMPL.
+PLACED_IMPL = "placed"
+
 
 @dataclass(frozen=True)
 class ComponentChoice:
@@ -130,6 +137,24 @@ def with_split_models(spec: dict | None = None, *,
     return base
 
 
+DEFAULT_PLACEMENT_MODELS = ("internlm2-1.8b", "gemma-7b")
+DEFAULT_PLACEMENT_CHAINS = ("orin+m4", "orin+m4+cloud")
+
+
+def with_placements(spec: dict | None = None, *,
+                    models: Iterable[str] = DEFAULT_PLACEMENT_MODELS,
+                    chains: Iterable[str] = DEFAULT_PLACEMENT_CHAINS) -> dict:
+    """A spec extending ``spec`` (default: ``DEFAULT_SPEC``) with pipelined
+    placement model choices — one per (catalog model, device chain), chains
+    as "+"-joined device names (``runtime/placement.py``).  Composes with
+    ``with_split_models`` (pass its result as ``spec``)."""
+    base = dict(spec or DEFAULT_SPEC)
+    base["model"] = dict(base["model"])
+    base["model"][PLACED_IMPL] = {
+        "model": list(models), "chain": list(chains)}
+    return base
+
+
 class PathSpace:
     def __init__(self, spec: dict | None = None, device: DeviceProfile | None = None):
         self.spec = spec or DEFAULT_SPEC
@@ -150,6 +175,22 @@ class PathSpace:
                         params = dict(zip(keys, combo))
                         if not model_fits_device(
                                 MODEL_CATALOG[params["edge"]], self.device):
+                            continue
+                        out.append(ComponentChoice(
+                            module, impl, tuple(zip(keys, combo))))
+                    continue
+                if impl == PLACED_IMPL:
+                    # placed paths run on their OWN device chain, not the
+                    # space's resident device: a configuration is feasible
+                    # iff its plan's stages all fit their chain members
+                    # (memory-infeasible plans never enter the path space)
+                    from repro.runtime.placement import get_plan
+
+                    keys = sorted(grid)
+                    for combo in itertools.product(*(grid[k] for k in keys)):
+                        params = dict(zip(keys, combo))
+                        plan = get_plan(params["model"], params["chain"])
+                        if not plan.memory_ok:
                             continue
                         out.append(ComponentChoice(
                             module, impl, tuple(zip(keys, combo))))
@@ -186,4 +227,9 @@ class PathSpace:
             # the on-device half; callers sizing RAM/latency budgets see the
             # resident edge member (the cloud half never occupies the device)
             return MODEL_CATALOG[path.model.param("edge")]
+        if path.model.impl == PLACED_IMPL:
+            # placement moves layers, not weights: quality/pricing callers
+            # see the underlying catalog model (its layers live on the
+            # plan's chain, not the space's resident device)
+            return MODEL_CATALOG[path.model.param("model")]
         return MODEL_CATALOG[path.model.impl]

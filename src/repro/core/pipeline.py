@@ -23,7 +23,8 @@ from repro.core.devices import (CLOUD_DEVICE, CLOUD_RTT_S, DeviceProfile,
                                 ModelProfile, decode_latency_s,
                                 model_call_cost_usd, model_call_latency_s)
 from repro.core.domains import TYPE_NEEDS, DomainData, Query
-from repro.core.paths import MODEL_CATALOG, SPLIT_IMPL, ComponentChoice, Path
+from repro.core.paths import (MODEL_CATALOG, PLACED_IMPL, SPLIT_IMPL,
+                              ComponentChoice, Path)
 from repro.core.retrieval import VectorStore
 from repro.core.splitgen import (CHUNK_TOKENS, EmitFn, GenChunk,
                                  generate_split)
@@ -202,6 +203,8 @@ class PipelineExecutor:
     def run_model(self, q: Query, choice: ComponentChoice, st: StageState) -> StageState:
         if choice.impl == SPLIT_IMPL:
             return self._run_split_model(q, choice, st)
+        if choice.impl == PLACED_IMPL:
+            return self._run_placed_model(q, choice, st)
         model = MODEL_CATALOG[choice.impl]
         prompt = int(st.prompt_tokens * (st.compressed if st.context_tokens else 1.0))
         lat = model_call_latency_s(model, self.device, prompt, out_tokens=0)
@@ -228,6 +231,24 @@ class PipelineExecutor:
         return replace(st, latency_s=r.latency_s, cost_usd=r.cost_usd,
                        knowledge_override=r.knowledge)
 
+    @staticmethod
+    def _placement_plan(choice: ComponentChoice):
+        from repro.runtime.placement import get_plan
+
+        return get_plan(choice.param("model"), choice.param("chain"))
+
+    def _run_placed_model(self, q: Query, choice: ComponentChoice,
+                          st: StageState) -> StageState:
+        """Pipelined-placement model stage (runtime/placement.py): TTFT is
+        the plan's bubble-aware pipelined prefill at the staged prompt
+        length; cost bills the plan's cloud-resident layer fraction.  The
+        plan is memoized, so this is a dict hit plus a closed form."""
+        plan = self._placement_plan(choice)
+        prompt = int(st.prompt_tokens * (st.compressed if st.context_tokens else 1.0))
+        lat = plan.prefill_latency_s(prompt)
+        cost = plan.cost_usd(prompt, OUT_TOKENS)
+        return replace(st, latency_s=st.latency_s + lat, cost_usd=st.cost_usd + cost)
+
     # -- judge oracle ---------------------------------------------------------
 
     def judge(self, q: Query, path: Path, st: StageState) -> float:
@@ -237,6 +258,10 @@ class PipelineExecutor:
         if path.model.impl == SPLIT_IMPL:
             # blended capability computed by the split model stage
             knowledge = st.knowledge_override
+        elif path.model.impl == PLACED_IMPL:
+            # placement moves layers across devices, not weights: the
+            # underlying catalog model answers at its own tier
+            knowledge = MODEL_CATALOG[path.model.param("model")].quality_tier
         else:
             knowledge = MODEL_CATALOG[path.model.impl].quality_tier
 
@@ -312,13 +337,21 @@ class PipelineExecutor:
                 return None
             acc = self.judge(q, path, st)
             return acc, st.latency_s, st.cost_usd
-        # whole-model path: final metrics come from the exact same calls as
-        # run() (bit-for-bit by construction); the chunk timeline decorates
-        # the bandwidth-bound decode trajectory on top of the TTFT metric
+        # whole-model / placed path: final metrics come from the exact same
+        # calls as run() (bit-for-bit by construction); the chunk timeline
+        # decorates the bandwidth-bound decode trajectory on top of the
+        # TTFT metric (placed paths pace decode by the plan's per-token
+        # pipelined rate, boundary transfers included)
         st = self.run_model(q, path.model, st)
         acc = self.judge(q, path, st)
-        model = MODEL_CATALOG[path.model.impl]
-        dev = CLOUD_DEVICE if model.placement == "cloud" else self.device
+        if path.model.impl == PLACED_IMPL:
+            decode_at = self._placement_plan(path.model).decode_latency_s
+        else:
+            model = MODEL_CATALOG[path.model.impl]
+            dev = CLOUD_DEVICE if model.placement == "cloud" else self.device
+
+            def decode_at(done: int) -> float:
+                return decode_latency_s(model, dev, done)
         done, i = 0, 0
         while done < OUT_TOKENS:
             tokens = min(CHUNK_TOKENS, OUT_TOKENS - done)
@@ -326,7 +359,7 @@ class PipelineExecutor:
             if not emit(GenChunk(
                     index=i, tokens=tokens, source=path.model.impl,
                     confidence=1.0,
-                    latency_s=st.latency_s + decode_latency_s(model, dev, done),
+                    latency_s=st.latency_s + decode_at(done),
                     cost_usd=st.cost_usd, final=done >= OUT_TOKENS)):
                 return None
             i += 1
@@ -376,15 +409,16 @@ class BatchedPipelineExecutor:
         #   5 usd/1k input, 6 usd_per_1k_out * OUT_TOKENS, 7 retrieval-null flag
         self._m_cols = np.empty((P, 8))
         self._key_bytes = []
-        # split-inference paths have no single catalog model: their model
-        # stage is data-dependent (per-chunk confidence gating), so those
-        # cells run the scalar walk in finish_block — trivially bit-equal
-        # with the oracle — while the rest of the block stays vectorized
-        self._split_js = np.zeros(P, bool)
+        # split-inference and placed paths have no single catalog model row:
+        # split model stages are data-dependent (per-chunk confidence
+        # gating) and placed stages price a memoized multi-stage plan, so
+        # those cells run the scalar walk in finish_block — trivially
+        # bit-equal with the oracle — while the rest stays vectorized
+        self._scalar_js = np.zeros(P, bool)
         for j, p in enumerate(self.paths):
-            if p.model.impl == SPLIT_IMPL:
-                self._split_js[j] = True
-                self._m_cols[j] = 0.0  # never read for split rows
+            if p.model.impl in (SPLIT_IMPL, PLACED_IMPL):
+                self._scalar_js[j] = True
+                self._m_cols[j] = 0.0  # never read for scalar rows
                 self._key_bytes.append(p.key.encode())
                 continue
             m = MODEL_CATALOG[p.model.impl]
@@ -564,22 +598,22 @@ class BatchedPipelineExecutor:
 
         ``js`` indexes ``self.paths``; ``state_of[i]`` indexes ``states`` for
         path ``js[i]``.  Returns (accuracy, latency_s, cost_usd) arrays.
-        Split-inference cells (chunk-level confidence gating, no single
-        catalog model row) are resolved by the scalar walk; everything else
-        stays on the vectorized fast path.
+        Split-inference and placed cells (no single catalog model row) are
+        resolved by the scalar walk; everything else stays on the
+        vectorized fast path.
         """
-        split = self._split_js[js]
-        if not split.any():
+        scalar = self._scalar_js[js]
+        if not scalar.any():
             return self._finish_vec(q, states, state_of, js)
         acc = np.empty(js.size)
         lat = np.empty(js.size)
         cost = np.empty(js.size)
-        rest = ~split
+        rest = ~scalar
         if rest.any():
             acc[rest], lat[rest], cost[rest] = self._finish_vec(
                 q, states, state_of[rest], js[rest])
         ex = self.scalar
-        for i in np.nonzero(split)[0]:
+        for i in np.nonzero(scalar)[0]:
             p = self.paths[js[i]]
             st = ex.run_model(q, p.model, states[state_of[i]])
             acc[i] = ex.judge(q, p, st)

@@ -56,6 +56,15 @@ contract).  What a new version recomputes: per-path latency/cost/accuracy
 means (optionally blended with decayed online serving statistics, see
 ``OnlinePathStats``), the evaluated mask, the kNN vote weights, and the
 per-version OOD-fallback memo.
+
+The selector is generic over the path space's configuration axes: split
+edge/cloud inference (``with_split_models``) and pipelined layer placement
+(``with_placements`` — which device chain hosts which layer span,
+``runtime/placement.py``) enter as ordinary model-stage choices with
+emulated evidence rows, so "which shard plan" is selected per (query, SLO)
+by the same kNN vote with zero selector-side special cases.  Both
+extensions change the path-space SHAPE, so they are fixed at table build
+time — the jit contract above is untouched.
 """
 from __future__ import annotations
 

@@ -21,6 +21,12 @@ latency / cost / SLO attainment.  Serving modes:
 (edge drafts chunks behind a confidence gate, cloud verifies low-confidence
 spans) so the selector can route draft/verify paths per query/SLO.
 
+``--placements`` extends the path space with pipelined layer-placement
+choices (``runtime/placement.py``): each (catalog model, device chain) pair
+whose roofline-searched plan fits memory becomes a selectable resolution
+path, and the startup banner prints every plan's stage split + predicted
+latency.  Composes with ``--split``.
+
 ``--adapt`` attaches the online adaptation plane (``runtime/adaptation.py``):
 served outcomes feed per-shard drift monitors and a tripped monitor
 hot-swaps targeted re-explored table rows into the selector mid-run.
@@ -44,7 +50,7 @@ from repro.core.cca import critical_component_analysis
 from repro.core.domains import build_domain, train_test_split
 from repro.core.dsqe import train_dsqe
 from repro.core.emulator import Emulator
-from repro.core.paths import PathSpace, with_split_models
+from repro.core.paths import PathSpace, with_placements, with_split_models
 from repro.core.rps import RuntimePathSelector
 from repro.core.slo import SLO
 from repro.runtime.orchestrator import Overloaded
@@ -52,11 +58,20 @@ from repro.runtime.router import TenantRouter, TenantSpec
 from repro.runtime.server import EcoLLMServer, Request
 
 
+def _spec(split: bool, placements: bool) -> dict | None:
+    """Compose the opt-in path-space extensions (None = DEFAULT_SPEC)."""
+    spec = with_split_models() if split else None
+    if placements:
+        spec = with_placements(spec)
+    return spec
+
+
 def build_server(domain_name: str, *, n_queries: int = 120, budget: float = 5.0,
                  lam: int = 0, seed: int = 0, n_replicas: int = 2,
-                 use_kernel: bool = False, split: bool = False):
+                 use_kernel: bool = False, split: bool = False,
+                 placements: bool = False):
     dom = build_domain(domain_name, n_queries=n_queries, seed=seed)
-    space = PathSpace(spec=with_split_models() if split else None)
+    space = PathSpace(spec=_spec(split, placements))
     train_idx, test_idx = train_test_split(dom, 0.3)
     emu = Emulator(dom, space, seed=seed)
     table = emu.explore(train_idx, budget=budget, lam=lam)
@@ -70,11 +85,12 @@ def build_server(domain_name: str, *, n_queries: int = 120, budget: float = 5.0,
 
 
 def _build_domain_shard(domain_name: str, *, n_queries: int, budget: float,
-                        lam: int, seed: int, split: bool = False):
+                        lam: int, seed: int, split: bool = False,
+                        placements: bool = False):
     """One domain's (DomainData, selector, executor, test_idx) — the
     adaptation pipeline of ``build_server`` without the server."""
     dom = build_domain(domain_name, n_queries=n_queries, seed=seed)
-    space = PathSpace(spec=with_split_models() if split else None)
+    space = PathSpace(spec=_spec(split, placements))
     train_idx, test_idx = train_test_split(dom, 0.3)
     emu = Emulator(dom, space, seed=seed)
     table = emu.explore(train_idx, budget=budget, lam=lam)
@@ -87,7 +103,8 @@ def _build_domain_shard(domain_name: str, *, n_queries: int, budget: float,
 
 def build_multi_server(domain_names: list[str], *, n_queries: int = 120,
                        budget: float = 5.0, lam: int = 0, seed: int = 0,
-                       n_replicas: int = 2, split: bool = False):
+                       n_replicas: int = 2, split: bool = False,
+                       placements: bool = False):
     """A multi-domain ``EcoLLMServer``: the first domain seeds the server
     (it is the ``default`` shard), the rest join via ``add_domain`` and are
     addressable by name (``Request.domain`` / ``TenantSpec.domain``).
@@ -98,14 +115,14 @@ def build_multi_server(domain_names: list[str], *, n_queries: int = 120,
     test_by_domain: dict[str, np.ndarray] = {}
     dom, rps, execu, test_idx = _build_domain_shard(
         domain_names[0], n_queries=n_queries, budget=budget, lam=lam,
-        seed=seed, split=split)
+        seed=seed, split=split, placements=placements)
     server = EcoLLMServer(dom, rps, execu, n_replicas=n_replicas, seed=seed)
     server.alias_default_domain(domain_names[0])
     test_by_domain[domain_names[0]] = test_idx
     for i, name in enumerate(domain_names[1:], start=1):
         dom, rps, execu, test_idx = _build_domain_shard(
             name, n_queries=n_queries, budget=budget, lam=lam,
-            seed=seed + i, split=split)
+            seed=seed + i, split=split, placements=placements)
         server.add_domain(name, dom, rps, execu)
         test_by_domain[name] = test_idx
     return server, test_by_domain
@@ -218,6 +235,10 @@ def main() -> None:
     ap.add_argument("--split", action="store_true",
                     help="extend the path space with CE-CoLLM split "
                          "edge-draft/cloud-verify model configurations")
+    ap.add_argument("--placements", action="store_true",
+                    help="extend the path space with pipelined layer-"
+                         "placement configurations (roofline-searched "
+                         "stage splits across device chains)")
     ap.add_argument("--batch", action="store_true",
                     help="serve via the handle_batch shim (one selection pass)")
     ap.add_argument("--async", dest="use_async", action="store_true",
@@ -261,8 +282,19 @@ def main() -> None:
 
     server, test_idx = build_server(args.domain, n_queries=args.queries,
                                     budget=args.budget, lam=int(args.latency_first),
-                                    use_kernel=args.use_kernel, split=args.split)
+                                    use_kernel=args.use_kernel, split=args.split,
+                                    placements=args.placements)
     slo = SLO(max_latency_s=args.max_latency, max_cost_usd=args.max_cost)
+    if args.placements:
+        from repro.core.paths import (DEFAULT_PLACEMENT_CHAINS,
+                                      DEFAULT_PLACEMENT_MODELS)
+        from repro.runtime.placement import get_plan
+
+        print("placement plans (memory-infeasible ones are pruned from the "
+              "path space):")
+        for m in DEFAULT_PLACEMENT_MODELS:
+            for c in DEFAULT_PLACEMENT_CHAINS:
+                print(f"  {get_plan(m, c).describe()}")
     if args.adapt:
         server.enable_adaptation(
             decay=args.adapt_decay,

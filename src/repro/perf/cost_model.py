@@ -13,6 +13,28 @@ Two compute variants are reported:
   * kernel_flops — what the Pallas kernels execute on TPU (fully-masked
                    tiles are skipped -> causal is ~2x cheaper at long S).
 The gap IS the motivation for the kernels; §Perf tracks it per cell.
+
+Placement extensions (PR 10): the same FLOP model is also exposed PER LAYER
+(``model_layer_costs``) so the placement plane (``runtime/placement.py``) can
+partition a model's layer stack into contiguous pipeline stages:
+
+  * ``LayerCost`` carries each block's prefill/decode FLOPs per token, its
+    resident parameter bytes (every expert, for the memory-fit check), the
+    bytes actually *streamed* per decode token (router + routed-k + shared
+    experts only, for the bandwidth roof), and its per-sequence cache bytes.
+    Per-layer parameter counts are analytic (projection/GLU shapes) and then
+    calibrated so blocks + embedding + head sum EXACTLY to
+    ``ModelConfig.param_count()`` / ``active_param_count()`` — the same
+    eval_shape ground truth the rest of ``perf/`` uses.
+  * The link model prices inter-stage activation transfers: a
+    ``LinkProfile`` is (sustained GB/s, per-hop RTT) and
+    ``transfer_time_s`` = rtt + bytes/bandwidth.  ``LAN_LINK`` is an
+    edge-cluster hop (10 GbE-class), ``WAN_LINK`` a persistent cloud
+    tunnel (no per-call endpoint queuing — that stays ``CLOUD_RTT_S``,
+    charged once per request by the placement plane, exactly like
+    ``model_call_latency_s`` charges whole cloud models).  Activation
+    bytes per boundary token are ``d_model * BYTES[dtype]`` (the residual
+    stream is all that crosses a stage cut).
 """
 from __future__ import annotations
 
@@ -21,6 +43,33 @@ from dataclasses import dataclass
 from repro.models.config import ModelConfig, ShapeSpec
 
 BYTES = {"bfloat16": 2, "float32": 4}
+
+
+# ---------------------------------------------------------------------------
+# inter-device link model (placement plane)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LinkProfile:
+    """A point-to-point transport between pipeline stages."""
+
+    name: str
+    gbytes_per_s: float  # sustained payload bandwidth
+    rtt_s: float  # per-hop latency (serialization + network)
+
+
+LAN_LINK = LinkProfile("lan", 1.25, 0.002)  # 10 GbE-class edge cluster hop
+WAN_LINK = LinkProfile("wan", 0.125, 0.04)  # persistent tunnel to the cloud
+
+
+def transfer_time_s(link: LinkProfile, nbytes: float) -> float:
+    return link.rtt_s + nbytes / (link.gbytes_per_s * 1e9)
+
+
+def activation_bytes(cfg: ModelConfig, tokens: float) -> float:
+    """Residual-stream bytes crossing a stage boundary for ``tokens``."""
+    return float(tokens) * cfg.d_model * BYTES[cfg.dtype]
 
 
 @dataclass
@@ -184,3 +233,125 @@ def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
 
         total += B * ENCDEC_DECODE_SRC_LEN * cfg.d_model * BYTES[cfg.dtype]
     return total
+
+
+# ---------------------------------------------------------------------------
+# per-layer decomposition (placement plane)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerCost:
+    """One transformer block as the placement search sees it.
+
+    FLOPs come from the same ``_block_flops_per_token`` the roofline uses
+    (impl variant — the blocked XLA schedule a real deployment executes);
+    parameter bytes are analytic per shape and calibrated so the stack plus
+    embedding/head reproduces ``param_count()`` exactly.
+    """
+
+    index: int
+    kind: str  # "attn" | "rglru" | "mlstm" | "slstm"
+    prefill_flops: float  # per prompt token
+    decode_flops: float  # per generated token at the reference context
+    weight_bytes: float  # resident bytes (MoE: every expert)
+    active_weight_bytes: float  # bytes streamed per decode token
+    kv_bytes: float  # per-sequence cache bytes at the reference context
+
+
+def _layer_params(cfg: ModelConfig, lt: str, active: bool) -> float:
+    """Analytic parameter count of one block (GLU/projection shapes; the
+    per-layer split behind ``model_layer_costs`` — see its calibration)."""
+    d = cfg.d_model
+    if lt == "attn":
+        H, hd, K = cfg.num_heads, cfg.head_dim, cfg.num_kv_heads
+        p = float(d * H * hd + 2 * d * K * hd + H * hd * d)
+        if cfg.cross_attention:
+            p += float(d * H * hd + 2 * d * K * hd + H * hd * d)
+        if cfg.num_experts:
+            per_expert = _glu(cfg, d, cfg.moe_d_ff) / 2.0
+            n = cfg.experts_per_token if active else cfg.num_experts
+            p += d * cfg.num_experts  # router
+            p += (n + cfg.num_shared_experts) * per_expert
+        elif cfg.d_ff:
+            p += _glu(cfg, d, cfg.d_ff) / 2.0
+        return p
+    if lt == "rglru":
+        R, W = cfg.rnn_state_dim, cfg.conv1d_width
+        p = float(2 * d * R + R * d + 2 * R * R + W * R)
+        if cfg.d_ff:
+            p += _glu(cfg, d, cfg.d_ff) / 2.0
+        return p
+    if lt == "mlstm":
+        inner = 2 * d
+        return float(2 * d * inner + 3 * inner * inner + inner * d)
+    if lt == "slstm":
+        dh = d // cfg.num_heads
+        ff = int(4 / 3 * d)
+        return float(4 * d * d + 4 * d * dh + d * d) + _glu(cfg, d, ff) / 2.0
+    raise KeyError(lt)
+
+
+def embed_head_bytes(cfg: ModelConfig) -> tuple[float, float]:
+    """(embedding, lm-head) parameter bytes.  Tied heads report 0 extra —
+    the matrix already lives with the embedding."""
+    eb = float(cfg.vocab_padded) * cfg.d_model * BYTES[cfg.dtype]
+    return eb, (0.0 if cfg.tie_embeddings else eb)
+
+
+def head_flops_per_token(cfg: ModelConfig) -> float:
+    return 2.0 * cfg.d_model * cfg.vocab_padded
+
+
+def _layer_kv_bytes(cfg: ModelConfig, lt: str, S: int) -> float:
+    """Per-sequence cache bytes of one block at context S (B=1 slice of
+    ``_cache_bytes``)."""
+    if lt == "attn":
+        from repro.models.blocks import attn_cache_capacity
+
+        W = attn_cache_capacity(cfg, S)
+        kv = 2.0 * W * cfg.num_kv_heads * cfg.head_dim * BYTES[cfg.dtype]
+        if cfg.cross_attention:
+            from repro.configs import ENCDEC_DECODE_SRC_LEN
+
+            kv += ENCDEC_DECODE_SRC_LEN * cfg.d_model * BYTES[cfg.dtype]
+        return kv
+    if lt == "rglru":
+        return cfg.rnn_state_dim * 4.0
+    if lt == "mlstm":
+        dh = 2 * cfg.d_model // cfg.num_heads
+        return cfg.num_heads * dh * dh * 4.0
+    if lt == "slstm":
+        return 4.0 * cfg.d_model * 4.0
+    raise KeyError(lt)
+
+
+def model_layer_costs(cfg: ModelConfig, S: int) -> list[LayerCost]:
+    """Per-block cost profile of the decoder stack at reference context S.
+
+    Parameter-byte calibration: analytic per-block params are scaled by one
+    global factor so blocks + embedding + head == ``cfg.param_count()``
+    (and the active-params variant == ``active_param_count()``), keeping
+    placement's memory-fit and bandwidth roofs consistent with every other
+    ``perf/`` consumer of the eval_shape ground truth.
+    """
+    types = cfg.layer_types
+    dt = BYTES[cfg.dtype]
+    raw = [_layer_params(cfg, lt, active=False) for lt in types]
+    raw_act = [_layer_params(cfg, lt, active=True) for lt in types]
+    eb, hb = embed_head_bytes(cfg)
+    io_params = (eb + hb) / dt
+    scale = max(cfg.param_count() - io_params, 0.0) / max(sum(raw), 1.0)
+    scale_act = max(cfg.active_param_count() - io_params, 0.0) \
+        / max(sum(raw_act), 1.0)
+    return [
+        LayerCost(
+            index=i, kind=lt,
+            prefill_flops=_block_flops_per_token(cfg, lt, S, True, False),
+            decode_flops=_block_flops_per_token(cfg, lt, S, True, True),
+            weight_bytes=raw[i] * scale * dt,
+            active_weight_bytes=raw_act[i] * scale_act * dt,
+            kv_bytes=_layer_kv_bytes(cfg, lt, S),
+        )
+        for i, lt in enumerate(types)
+    ]

@@ -2,3 +2,5 @@ from repro.runtime.server import EcoLLMServer, Request, Response  # noqa: F401
 from repro.runtime.fleet import ReplicaFleet, Replica, FleetFuture  # noqa: F401
 from repro.runtime.orchestrator import (  # noqa: F401
     Orchestrator, Overloaded, Ticket)
+from repro.runtime.placement import (  # noqa: F401
+    PlacementPlan, StagePlan, get_plan, search_placement, simulate_pipeline)

@@ -1,0 +1,220 @@
+"""Placement plane: split-point search edge cases + path-space integration.
+
+Covers the directed edge cases the placement contract promises
+(runtime/placement.py): models too big for any single edge device must
+pipeline or go cloud, single-layer models place as one stage, memory-
+infeasible plans never enter the path space, longer chains never predict
+worse than a subset chain, and DEFAULT_SPEC tables stay byte-identical
+with placements off.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.devices import EDGE_DEVICES
+from repro.core.domains import build_domain
+from repro.core.emulator import Emulator
+from repro.core.paths import (DEFAULT_SPEC, PLACED_IMPL, PathSpace,
+                              with_placements, with_split_models)
+from repro.core.pipeline import (OUT_TOKENS, BatchedPipelineExecutor,
+                                 PipelineExecutor)
+from repro.core.slo import SLO
+from repro.models.config import ModelConfig
+from repro.runtime.placement import (DEFAULT_OUT_TOKENS, get_plan,
+                                     search_placement, simulate_pipeline)
+
+TINY = ModelConfig("tiny-dense", "dense", 8, 256, 4, 4, 1024, 1000)
+
+
+def _total_s(plan) -> float:
+    return (plan.predicted_prefill_s
+            + DEFAULT_OUT_TOKENS * plan.predicted_decode_s_per_token)
+
+
+# ---------------------------------------------------------------------------
+# split-point search edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_single_layer_model_places_as_one_stage():
+    cfg = ModelConfig("tiny-1l", "dense", 1, 256, 4, 4, 1024, 1000)
+    plan = search_placement(cfg, ("orin", "m4"))
+    assert plan.memory_ok
+    assert len(plan.stages) == 1
+    s = plan.stages[0]
+    assert (s.start, s.end) == (0, 1)
+    assert s.device in ("orin", "m4")
+    sim = simulate_pipeline(plan)
+    assert math.isclose(sim["makespan_s"],
+                        plan.prefill_latency_s(plan.prompt_tokens),
+                        rel_tol=1e-9)
+
+
+def test_too_big_for_any_single_edge_device_must_pipeline():
+    # gemma-7b (~17 GB bf16) exceeds orin (8 GB) and m1pro (16 GB) at the
+    # 0.75 headroom rule, but a 2-stage pipeline over both fits
+    for dev in ("orin", "m1pro"):
+        assert not get_plan("gemma-7b", dev).memory_ok
+    plan = get_plan("gemma-7b", "orin+m1pro")
+    assert plan.memory_ok
+    assert len(plan.stages) == 2
+    assert [s.device for s in plan.stages] == ["orin", "m1pro"]
+    # contiguous cover of the full stack
+    assert plan.stages[0].start == 0 and plan.stages[-1].end == 28
+    assert plan.stages[0].end == plan.stages[1].start
+
+
+def test_too_big_for_all_edge_must_go_cloud():
+    # kimi-k2 resident expert weights (~2 TB bf16) exceed every edge combo;
+    # with the cloud in the chain every layer lands on the unbounded stage
+    assert not get_plan("kimi-k2-cloud", "orin+m4").memory_ok
+    plan = get_plan("kimi-k2-cloud", "orin+m4+cloud")
+    assert plan.memory_ok
+    assert plan.cloud_fraction == 1.0
+    assert [s.device for s in plan.stages] == ["cloud"]
+
+
+def test_memory_infeasible_plans_rejected_from_path_space():
+    bad = with_placements(models=("kimi-k2-cloud",), chains=("orin+m4",))
+    assert not [p for p in PathSpace(spec=bad).paths
+                if p.model.impl == PLACED_IMPL]
+    good = with_placements(models=("kimi-k2-cloud",), chains=("orin+m4+cloud",))
+    placed = [p for p in PathSpace(spec=good).paths
+              if p.model.impl == PLACED_IMPL]
+    assert placed and all(
+        get_plan(p.model.param("model"), p.model.param("chain")).memory_ok
+        for p in placed)
+
+
+def test_more_devices_never_predict_worse():
+    # empty stages make a superset chain's candidate set contain every
+    # subset chain's, so the latency objective is monotone by construction
+    for cfg in (TINY,):
+        sup = search_placement(cfg, ("orin", "m4", "cloud"))
+        for sub in (("orin",), ("m4",), ("orin", "m4"), ("m4", "cloud")):
+            p = search_placement(cfg, sub)
+            if p.memory_ok:
+                assert sup.memory_ok
+                assert _total_s(sup) <= _total_s(p) * (1 + 1e-9)
+    sup = get_plan("gemma-7b", "orin+m1pro+cloud")
+    sub = get_plan("gemma-7b", "orin+m1pro")
+    assert _total_s(sup) <= _total_s(sub) * (1 + 1e-9)
+
+
+def test_simulator_matches_closed_form_with_bubbles():
+    # the forced-pipeline plan runs m > 1 micro-batches: fill/drain bubbles
+    # are live, and the event-driven schedule must equal sum + (m-1)*max
+    plan = get_plan("gemma-7b", "orin+m1pro")
+    assert plan.micro_batches > 1
+    sim = simulate_pipeline(plan)
+    assert math.isclose(sim["makespan_s"], plan.predicted_prefill_s,
+                        rel_tol=1e-9)
+    assert 0.0 < sim["bubble_fraction"] < 1.0
+    # closed form holds at off-reference prompt lengths too
+    sim768 = simulate_pipeline(plan, prompt_tokens=768)
+    assert math.isclose(sim768["makespan_s"], plan.prefill_latency_s(768),
+                        rel_tol=1e-9)
+
+
+def test_slo_aware_search_prefers_cheapest_feasible():
+    # latency-only: the cloud's roofline wins; under an SLO the edge meets,
+    # feasible-cheapest keeps the small model on free edge compute
+    fast = get_plan("internlm2-1.8b", "orin+m4+cloud")
+    assert fast.cloud_fraction > 0.0
+    cheap = get_plan("internlm2-1.8b", "orin+m4+cloud",
+                     slo=SLO(max_latency_s=2.0))
+    assert cheap.slo_ok and cheap.memory_ok
+    assert cheap.cloud_fraction == 0.0
+    assert cheap.cost_usd(512, OUT_TOKENS) == 0.0
+
+
+def test_plan_determinism_and_memo():
+    a = get_plan("internlm2-1.8b", "orin+m4")
+    b = get_plan("internlm2-1.8b", ("orin", "m4"))
+    assert a is b  # one memoized entry per (model, chain, slo, prompt)
+    c = search_placement(
+        __import__("repro.configs", fromlist=["get_config"]).get_config(
+            "internlm2-1.8b"), ("orin", "m4"), model="internlm2-1.8b")
+    assert c.stages == a.stages and c.micro_batches == a.micro_batches
+
+
+# ---------------------------------------------------------------------------
+# path-space integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def placed_world():
+    dom = build_domain("agriculture", n_queries=10, seed=0)
+    space = PathSpace(spec=with_placements())
+    ex = PipelineExecutor(dom, EDGE_DEVICES["m4"], seed=0)
+    return dom, space, ex
+
+
+def test_placed_cell_accounting_reproduces_plan(placed_world):
+    dom, space, ex = placed_world
+    q = dom.queries[0]
+    # a bare placed path (null preprocessing): its latency/cost must be
+    # EXACTLY the plan's closed-form prefill + cloud-fraction billing
+    path = next(p for p in space.paths
+                if p.model.impl == PLACED_IMPL
+                and p.qproc.impl == "null" and p.retrieval.impl == "null"
+                and p.cproc.impl == "null")
+    acc, lat, cost = ex.run(q, path)
+    plan = get_plan(path.model.param("model"), path.model.param("chain"))
+    prompt = ex.initial_state(q).prompt_tokens
+    assert lat == plan.prefill_latency_s(prompt)
+    assert cost == plan.cost_usd(prompt, OUT_TOKENS)
+    assert 0.0 <= acc <= 1.0
+
+
+def test_batched_engine_parity_over_placed_space(placed_world):
+    dom, space, ex = placed_world
+    bx = BatchedPipelineExecutor(ex, space.paths)
+    q = dom.queries[1]
+    acc, lat, cost = bx.run_block(q)
+    for j, p in enumerate(space.paths):
+        a, l, c = ex.run(q, p)
+        assert (a, l, c) == (acc[j], lat[j], cost[j]), p.key
+
+
+def test_placed_stream_parity_and_pacing(placed_world):
+    dom, space, ex = placed_world
+    q = dom.queries[2]
+    path = next(p for p in space.paths if p.model.impl == PLACED_IMPL)
+    chunks = []
+    res = ex.run_stream(q, path, lambda ch: chunks.append(ch) or True)
+    assert res == ex.run(q, path)  # bit-identical final metrics
+    assert sum(c.tokens for c in chunks) == OUT_TOKENS and chunks[-1].final
+    plan = get_plan(path.model.param("model"), path.model.param("chain"))
+    # chunk timeline paces by the plan's pipelined per-token decode rate
+    done = chunks[0].tokens
+    assert chunks[0].latency_s == res[1] + plan.decode_latency_s(done)
+
+
+def test_default_spec_untouched_and_tables_byte_identical():
+    spec = with_placements()
+    assert PLACED_IMPL in spec["model"]
+    assert PLACED_IMPL not in DEFAULT_SPEC["model"]
+    assert PLACED_IMPL in with_placements(with_split_models())["model"]
+
+    dom = build_domain("agriculture", n_queries=10, seed=0)
+    idx = np.arange(6)
+    before = Emulator(dom, PathSpace(), seed=0).explore(idx, budget=2.0)
+    # building a placement-extended space must not perturb default tables
+    PathSpace(spec=with_placements())
+    after = Emulator(dom, PathSpace(), seed=0).explore(idx, budget=2.0)
+    assert before.bit_equal(after)
+    assert all(p.model.impl != PLACED_IMPL for p in PathSpace().paths)
+
+
+def test_emulator_sweeps_placed_paths(placed_world):
+    dom, space, ex = placed_world
+    emu = Emulator(dom, space, seed=0)
+    table = emu.explore(np.arange(4), budget=2.0)
+    js = [p.pid for p in space.paths if p.model.impl == PLACED_IMPL]
+    assert np.asarray(table.evaluated)[:, js].any(), \
+        "placed paths never evaluated by the sweep"
